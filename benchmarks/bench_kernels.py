@@ -1,0 +1,64 @@
+"""Op-level kernel benchmarks: SpMM (trusted / BSR / ELL), SDDMM, FusedMM.
+
+Wall-clock is CPU (XLA paths — the same algorithmic shapes the Pallas
+kernels implement); the analytic v5e roofline fraction per op comes from the
+autotuner's cost model and is reported alongside.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.core import (bsr_from_coo, build_cached_graph, ell_from_coo,
+                        fusedmm, get_semiring, sddmm)
+from repro.core.autotune import (HardwareModel, KernelPlan,
+                                 estimate_plan_time, graph_stats)
+from repro.data import make_dataset
+from repro.kernels import ops as kops
+from repro.kernels.ref import spmm_coo_ref, spmm_ell_ref
+
+
+def run(dataset: str = "reddit", scale=1 / 64, k: int = 128) -> list[dict]:
+    ds = make_dataset(dataset, scale=scale)
+    a = ds.coo
+    hw = HardwareModel()
+    stats = graph_stats(a)
+    rng = np.random.default_rng(0)
+    h = jnp.asarray(rng.standard_normal((a.ncols, k)).astype(np.float32))
+    rows = []
+
+    sr = get_semiring("sum")
+    t = time_fn(jax.jit(lambda hh: spmm_coo_ref(a, hh, sr)), h)
+    est = estimate_plan_time(stats, k, KernelPlan.trusted(), hw)
+    rows.append(dict(op="spmm_trusted", s=t, v5e_est_s=est))
+
+    bsr = bsr_from_coo(a, br=128, bc=128)
+    t = time_fn(jax.jit(lambda hh: kops.bsr_spmm(bsr, hh)), h)
+    est = estimate_plan_time(stats, k, KernelPlan(kind="bsr"), hw)
+    rows.append(dict(op="spmm_bsr", s=t, v5e_est_s=est))
+
+    ell = ell_from_coo(a, max_deg=int(stats.p99_deg))
+    t = time_fn(jax.jit(lambda hh: spmm_ell_ref(ell, hh, sr)), h)
+    est = estimate_plan_time(stats, k, KernelPlan(kind="ell"), hw)
+    rows.append(dict(op="spmm_ell", s=t, v5e_est_s=est))
+
+    g = build_cached_graph(a, k_hint=k, tune=False)
+    x = jnp.asarray(rng.standard_normal((a.nrows, 64)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((a.ncols, 64)).astype(np.float32))
+    t = time_fn(jax.jit(lambda xx, yy: sddmm(g, xx, yy)), x, y)
+    rows.append(dict(op="sddmm", s=t, v5e_est_s=None))
+
+    t = time_fn(jax.jit(lambda xx, yy, hh: fusedmm(g, xx, yy, hh)), x, y, h)
+    rows.append(dict(op="fusedmm_softmax", s=t, v5e_est_s=None))
+
+    for r in rows:
+        extra = (f"v5e_est_us={r['v5e_est_s'] * 1e6:.1f}"
+                 if r["v5e_est_s"] else "")
+        emit(f"kernel/{dataset}/{r['op']}", r["s"], extra)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""LM smoke-scale step timings (CPU): train step and decode step per arch.
+Not a TPU number — a regression canary for the step-builder plumbing; the
+real perf story is the roofline table (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.configs import arch_names, get_smoke_config
+import repro.models.lm.transformer as T
+from repro.train import lm as TL
+
+
+def run(archs=None, b: int = 2, s: int = 64) -> list[dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for arch in archs or arch_names():
+        cfg = get_smoke_config(arch)
+        step, opt = TL.make_train_step(cfg, lr=1e-3)
+        state = TL.make_train_state(cfg, jax.random.PRNGKey(0), opt)
+        batch = {"targets": jnp.asarray(
+            rng.integers(0, cfg.vocab, (b, s)), jnp.int32)}
+        if cfg.family == "audio":
+            batch["frames"] = jnp.asarray(
+                rng.standard_normal((b, s, cfg.d_model)), jnp.float32)
+        else:
+            batch["tokens"] = jnp.asarray(
+                rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+            if cfg.family == "vlm":
+                batch["image_emb"] = jnp.asarray(
+                    rng.standard_normal((b, cfg.n_prefix_tokens,
+                                         cfg.d_model)), jnp.float32)
+        jstep = jax.jit(step)
+        t_tr = time_fn(jstep, state, batch, warmup=1, reps=3)
+        rows.append(dict(arch=arch, op="train_step", s=t_tr))
+        emit(f"lm_smoke/{arch}/train_step", t_tr)
+
+        if not cfg.is_encoder:
+            cache = T.init_cache(cfg, b, 256)
+            tok = jnp.asarray(rng.integers(0, cfg.vocab, (b, 1)), jnp.int32)
+            jdec = jax.jit(lambda p, c, t: T.decode_step(cfg, p, c, t))
+            t_de = time_fn(jdec, state.params, cache, tok, warmup=1, reps=3)
+            rows.append(dict(arch=arch, op="decode_step", s=t_de))
+            emit(f"lm_smoke/{arch}/decode_step", t_de)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Shared benchmark utilities: timing, CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+__all__ = ["time_fn", "emit"]
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, reps: int = 5) -> float:
+    """Median-of-reps seconds per call (after jit warmup)."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(name: str, seconds: float, derived: str = "") -> None:
+    """One CSV row: name,us_per_call,derived."""
+    print(f"{name},{seconds * 1e6:.1f},{derived}", flush=True)

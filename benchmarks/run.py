@@ -1,0 +1,59 @@
+"""Benchmark entry point: one bench per paper table/figure + extras.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+CSV rows: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller datasets / fewer points")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_cached_backprop, bench_gnn_training,
+                            bench_kernels, bench_lm_step, bench_moe_dispatch,
+                            bench_tuning_curve)
+
+    scale = 1 / 256 if args.fast else 1 / 64
+    benches = {
+        "tuning_curve": lambda: bench_tuning_curve.run(
+            datasets=("reddit", "ogbn-proteins"), scale=scale,
+            ks=(16, 32, 64, 128) if args.fast else (16, 32, 64, 128, 256,
+                                                    512)),
+        "gnn_training": lambda: bench_gnn_training.run(
+            datasets=("reddit", "ogbn-proteins") if args.fast else
+            ("reddit", "reddit2", "ogbn-mag", "amazon", "ogbn-products",
+             "ogbn-proteins"),
+            scale=scale, epochs=5 if args.fast else 10),
+        "cached_backprop": lambda: bench_cached_backprop.run(
+            datasets=("reddit",) if args.fast else
+            ("reddit", "ogbn-products"), scale=scale),
+        "kernels": lambda: bench_kernels.run(scale=scale),
+        "moe_dispatch": lambda: bench_moe_dispatch.run(
+            t=2048 if args.fast else 8192),
+        "lm_step": lambda: bench_lm_step.run(
+            archs=("llama3-8b", "mamba2-1.3b") if args.fast else None),
+    }
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        fn()
+    print(f"# total_wall_s={time.time() - t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

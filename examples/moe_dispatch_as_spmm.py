@@ -1,0 +1,52 @@
+"""The paper's technique on the LM side: MoE token dispatch IS a semiring
+SpMM. Builds the literal sparse dispatch/combine matrices, verifies they
+reproduce the MoE layer, and shows the FLOP gap vs the dense one-hot einsum.
+
+    PYTHONPATH=src python examples/moe_dispatch_as_spmm.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as isplib
+from repro.core import dispatch as D
+
+
+def main():
+    t, e, k, d = 512, 8, 2, 64
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((t, d)).astype(np.float32))
+    logits = jnp.asarray(rng.standard_normal((t, e)).astype(np.float32))
+
+    r = D.route_topk(logits, k)
+    print(f"routing: {t} tokens -> {e} experts (top-{k}), "
+          f"capacity {r.capacity}/expert, "
+          f"dropped {int((~np.asarray(r.keep)).sum())} assignments")
+
+    # dispatch as scatter (what the EP path runs)
+    buf = D.dispatch(x, r)
+
+    # dispatch as LITERAL SpMM with the paper's matmul
+    p_coo, pt_coo = D.as_coo_matrices(r, t)
+    buf_spmm = isplib.matmul(p_coo, x, reduce="sum")
+    err = float(jnp.abs(buf.reshape(-1, d) - buf_spmm).max())
+    print(f"dispatch-as-SpMM == scatter dispatch: max err {err:.2e}")
+
+    # combine as SpMM (gate-weighted transpose)
+    y = jnp.asarray(rng.standard_normal(buf.shape).astype(np.float32))
+    out = D.combine(y, r)
+    out_spmm = isplib.matmul(pt_coo, y.reshape(-1, d), reduce="sum")
+    err = float(jnp.abs(out - out_spmm).max())
+    print(f"combine-as-SpMM  == gather combine:   max err {err:.2e}")
+
+    flops_dense = 2.0 * t * k * e * r.capacity * d
+    flops_sparse = 2.0 * t * k * d
+    print(f"dense one-hot dispatch FLOPs: {flops_dense:.2e}")
+    print(f"sparse dispatch FLOPs:        {flops_sparse:.2e} "
+          f"({flops_dense / flops_sparse:.0f}x less)")
+    print("\n(the production mesh runs this as grouped all_to_all EP — "
+          "see models/lm/moe.py and the phi3.5 roofline rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.ckpt.checkpointer import (Checkpointer, save_checkpoint,
+                                     restore_checkpoint, latest_step)
+
+__all__ = ["Checkpointer", "save_checkpoint", "restore_checkpoint",
+           "latest_step"]

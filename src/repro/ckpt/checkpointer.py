@@ -1,0 +1,179 @@
+"""Sharded, atomic, async checkpointing with reshard-on-restore.
+
+Layout (one directory per step):
+    <dir>/step_000123/
+        manifest.json          tree structure, shapes, dtypes, mesh info
+        arr_00000.npy ...      one file per leaf (gathered host values)
+        _COMMITTED             written LAST — restore ignores dirs without it
+
+Fault-tolerance properties:
+  * atomic: tmp-dir + rename, `_COMMITTED` marker written after fsync;
+    a crash mid-save never corrupts the latest durable step;
+  * async: `save(..., blocking=False)` hands the host copy to a background
+    thread so the train loop keeps stepping (double-buffered: at most one
+    in-flight save, the next save waits);
+  * elastic restore: values are re-placed with jax.device_put against the
+    *current* mesh's shardings — restoring a 512-chip checkpoint onto a
+    256-chip (degraded) mesh just reshards;
+  * keep-N garbage collection.
+
+At real multi-pod scale each host writes only its addressable shards
+(process-local npy per shard index); this single-host implementation
+gathers to host 0, which is the degenerate case of the same protocol.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["Checkpointer", "save_checkpoint", "restore_checkpoint",
+           "latest_step"]
+
+
+def _step_dir(base: str, step: int) -> str:
+    return os.path.join(base, f"step_{step:09d}")
+
+
+def _flatten_with_paths(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(base: str, step: int, tree: Any, *,
+                    extra: Optional[dict] = None) -> str:
+    """Blocking sharded save. Returns the committed directory."""
+    os.makedirs(base, exist_ok=True)
+    final = _step_dir(base, step)
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves, treedef = _flatten_with_paths(tree)
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "extra": extra or {},
+        "leaves": [],
+    }
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"arr_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            {"file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    with open(os.path.join(tmp, "_COMMITTED"), "w") as f:
+        f.write(str(time.time()))
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    return final
+
+
+def latest_step(base: str) -> Optional[int]:
+    if not os.path.isdir(base):
+        return None
+    steps = []
+    for d in os.listdir(base):
+        if d.startswith("step_") and not d.endswith(".tmp") and \
+                os.path.exists(os.path.join(base, d, "_COMMITTED")):
+            steps.append(int(d.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(base: str, tree_like: Any, *, step: Optional[int] = None,
+                       shardings: Any = None) -> tuple[Any, int]:
+    """Restore into the structure of ``tree_like``; re-place onto
+    ``shardings`` (pytree of NamedSharding, e.g. for the CURRENT mesh —
+    the elastic-restart reshard) or default devices."""
+    if step is None:
+        step = latest_step(base)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {base}")
+    d = _step_dir(base, step)
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    leaves_like, treedef = jax.tree_util.tree_flatten(tree_like)
+    assert len(leaves_like) == manifest["n_leaves"], \
+        f"leaf count mismatch: {len(leaves_like)} vs {manifest['n_leaves']}"
+    shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(leaves_like))
+
+    out = []
+    for i, (like, sh) in enumerate(zip(leaves_like, shard_leaves)):
+        arr = np.load(os.path.join(d, manifest["leaves"][i]["file"]))
+        assert tuple(arr.shape) == tuple(like.shape), \
+            (i, arr.shape, like.shape)
+        arr = arr.astype(like.dtype)
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(treedef, out), step
+
+
+class Checkpointer:
+    """Async double-buffered checkpointer with keep-N GC."""
+
+    def __init__(self, base: str, *, keep: int = 3):
+        self.base = base
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def save(self, step: int, tree: Any, *, blocking: bool = False,
+             extra: Optional[dict] = None) -> None:
+        self.wait()                       # at most one in-flight save
+        host_tree = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                save_checkpoint(self.base, step, host_tree, extra=extra)
+                self._gc()
+            except BaseException as e:    # surfaced on next wait()/save()
+                self._error = e
+
+        if blocking:
+            work()
+            self.wait()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def restore(self, tree_like: Any, *, step: Optional[int] = None,
+                shardings: Any = None):
+        self.wait()
+        return restore_checkpoint(self.base, tree_like, step=step,
+                                  shardings=shardings)
+
+    def _gc(self) -> None:
+        if not os.path.isdir(self.base):
+            return
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.base)
+            if d.startswith("step_") and not d.endswith(".tmp")
+            and os.path.exists(os.path.join(self.base, d, "_COMMITTED")))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(_step_dir(self.base, s), ignore_errors=True)

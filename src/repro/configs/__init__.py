@@ -1,0 +1,5 @@
+from repro.configs.base import ModelConfig, ShapeCell, LM_SHAPES, shape_cells_for
+from repro.configs.registry import ARCHS, get_config, get_smoke_config, arch_names
+
+__all__ = ["ModelConfig", "ShapeCell", "LM_SHAPES", "shape_cells_for",
+           "ARCHS", "get_config", "get_smoke_config", "arch_names"]

@@ -1,0 +1,34 @@
+"""iSpLib core: auto-tuned semiring sparse ops with cached backpropagation.
+
+Public surface (the paper's user API, §3.5–3.6):
+
+    from repro.core import matmul, spmm, sddmm, fusedmm
+    from repro.core import build_cached_graph, autotune, tuning_curve
+    from repro.core import patch, unpatch, patched, patch_fn
+"""
+from repro.core.sparse import (COO, CSR, BSR, ELL, coo_from_edges,
+                               csr_from_coo, bsr_from_coo, ell_from_coo,
+                               coo_transpose, gcn_normalize, row_degrees)
+from repro.core.semiring import Semiring, get_semiring
+from repro.core.autotune import (HardwareModel, KernelPlan, autotune,
+                                 tuning_curve, suggest_embedding_size,
+                                 probe_hardware, TuningDB)
+from repro.core.cache import CachedGraph, build_cached_graph
+from repro.core.spmm import spmm, matmul
+from repro.core.sddmm import sddmm
+from repro.core.fusedmm import fusedmm
+from repro.core import baselines
+from repro.core.patch import (patch, unpatch, patched, patch_fn, resolve,
+                              is_patched, patch_version, _ensure_defaults)
+
+_ensure_defaults()
+
+__all__ = [
+    "COO", "CSR", "BSR", "ELL", "coo_from_edges", "csr_from_coo",
+    "bsr_from_coo", "ell_from_coo", "coo_transpose", "gcn_normalize",
+    "row_degrees", "Semiring", "get_semiring", "HardwareModel", "KernelPlan",
+    "autotune", "tuning_curve", "suggest_embedding_size", "probe_hardware",
+    "TuningDB", "CachedGraph", "build_cached_graph", "spmm", "matmul",
+    "sddmm", "fusedmm", "baselines", "patch", "unpatch", "patched",
+    "patch_fn", "resolve", "is_patched", "patch_version",
+]

@@ -1,0 +1,92 @@
+"""CachedGraph — the cache-enabled backpropagation artifact store (paper §3.3).
+
+iSpLib's big end-to-end win comes from computing graph-static intermediates
+ONCE and reusing them every step/epoch:
+
+  * the transposed adjacency (backward pass operand)   — here: ``coo_t``/``bsr_t``
+  * the GCN-normalized adjacency                        — built via
+    :func:`repro.core.sparse.gcn_normalize` before caching
+  * row degrees / inverse degrees (mean semiring)       — ``degrees``/``inv_deg``
+  * format conversion + kernel plan (autotuner output)  — ``bsr``/``plan``
+
+The uncached baseline (what the paper compares against) recomputes the
+normalization per forward and materializes message gradients per backward;
+see ``benchmarks/bench_cached_backprop.py``.
+
+A CachedGraph is a pytree and can be donated/closed-over by jitted steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sparse as sp
+from repro.core.autotune import KernelPlan, autotune  # noqa: F401 (re-export)
+
+Array = Any
+
+__all__ = ["CachedGraph", "build_cached_graph"]
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["coo", "coo_t", "bsr", "bsr_t", "degrees", "degrees_t",
+                      "inv_deg", "inv_deg_t"],
+         meta_fields=["plan"])
+@dataclasses.dataclass(frozen=True)
+class CachedGraph:
+    coo: sp.COO
+    coo_t: sp.COO                 # cached transpose — §3.3
+    bsr: Optional[sp.BSR]         # generated-kernel format (None if plan is trusted)
+    bsr_t: Optional[sp.BSR]
+    degrees: Array                # out-degree per row of A
+    degrees_t: Array              # per row of A^T
+    inv_deg: Array                # 1/max(deg,1)  (mean semiring, cached)
+    inv_deg_t: Array
+    plan: KernelPlan              # static: autotuner decision
+
+    @property
+    def shape(self):
+        return self.coo.shape
+
+    @property
+    def nrows(self):
+        return self.coo.nrows
+
+    @property
+    def ncols(self):
+        return self.coo.ncols
+
+
+def build_cached_graph(a: sp.COO, *, k_hint: int = 128,
+                       plan: KernelPlan | None = None,
+                       tune: bool = True,
+                       measure: bool = False) -> CachedGraph:
+    """Host-side one-time preprocessing: transpose, degrees, BSR tiling,
+    kernel plan. ``k_hint`` is the embedding width the tuner optimizes for."""
+    a_t = sp.coo_transpose(a)
+    deg = sp.row_degrees(a)
+    deg_t = sp.row_degrees(a_t)
+
+    if plan is None:
+        if tune:
+            plan = autotune(a, k_hint, measure=measure)
+        else:
+            plan = KernelPlan.trusted()
+
+    bsr = bsr_t = None
+    if plan.wants_bsr:
+        bsr = sp.bsr_from_coo(a, br=plan.br, bc=plan.bc)
+        bsr_t = sp.bsr_from_coo(a_t, br=plan.br, bc=plan.bc)
+
+    return CachedGraph(
+        coo=a, coo_t=a_t, bsr=bsr, bsr_t=bsr_t,
+        degrees=deg, degrees_t=deg_t,
+        inv_deg=1.0 / jnp.maximum(deg, 1.0),
+        inv_deg_t=1.0 / jnp.maximum(deg_t, 1.0),
+        plan=plan,
+    )

@@ -1,0 +1,91 @@
+"""FusedMM: SDDMM → edge nonlinearity → SpMM without materializing the edge
+tensor in HBM (paper §3.4 / FusedMM, Rahman et al. IPDPS'21).
+
+Forward dispatches to the fused Pallas kernel when the plan has BSR tiles
+(TPU) or to the trusted composition otherwise. Backward is recompute-based
+(flash-attention style): the fused forward stores only (x, y, h, out); edge
+weights are rebuilt tile-by-tile in the backward. On the trusted path JAX's
+own AD over the composition is used — it is already optimal there because the
+edge tensor exists anyway.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cache import CachedGraph
+from repro.kernels import ops as kops
+from repro.kernels.ref import fusedmm_coo_ref
+
+Array = Any
+
+__all__ = ["fusedmm"]
+
+
+def _use_fused_kernel(g: CachedGraph, k: int) -> bool:
+    return g.plan.wants_bsr and g.bsr is not None and k % 128 == 0
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _fusedmm(g: CachedGraph, x: Array, y: Array, h: Array, edge_op: str
+             ) -> Array:
+    if _use_fused_kernel(g, h.shape[-1]):
+        return kops.fusedmm_bsr(g.bsr, x, y, h, edge_op=edge_op
+                                )[: g.coo.nrows].astype(h.dtype)
+    return fusedmm_coo_ref(g.coo, x, y, h, edge_op=edge_op)
+
+
+def _fwd(g, x, y, h, edge_op):
+    out = _fusedmm(g, x, y, h, edge_op)
+    return out, (g, x, y, h, out)
+
+
+def _bwd(edge_op, res, dout):
+    g, x, y, h, out = res
+    coo = g.coo
+    valid = coo.valid_mask()
+    s = jnp.sum(x[coo.row] * y[coo.col], axis=-1)               # recompute
+    if edge_op == "softmax":
+        neg = jnp.asarray(-jnp.inf, s.dtype)
+        sm = jnp.where(valid, s, neg)
+        m = jax.ops.segment_max(sm, coo.row, num_segments=coo.nrows)
+        m = jnp.where(jnp.isinf(m), 0.0, m)
+        e = jnp.where(valid, jnp.exp(sm - m[coo.row]), 0.0)
+        z = jnp.maximum(jax.ops.segment_sum(e, coo.row, coo.nrows), 1e-30)
+        w = e / z[coo.row]
+        # dL/dw_e = dout[row_e]·h[col_e]; softmax jacobian per row
+        dw = jnp.sum(dout[coo.row] * h[coo.col], axis=-1)
+        wd = w * dw
+        srow = jax.ops.segment_sum(wd, coo.row, coo.nrows)
+        ds = wd - w * srow[coo.row]
+    elif edge_op == "sigmoid":
+        w = jnp.where(valid, jax.nn.sigmoid(s), 0.0)
+        dw = jnp.sum(dout[coo.row] * h[coo.col], axis=-1)
+        ds = jnp.where(valid, dw * w * (1.0 - w), 0.0)
+    else:  # 'none'
+        w = jnp.where(valid, s, 0.0)
+        ds = jnp.where(valid,
+                       jnp.sum(dout[coo.row] * h[coo.col], axis=-1), 0.0)
+
+    dh = jax.ops.segment_sum(w[:, None] * dout[coo.row], coo.col,
+                             num_segments=coo.ncols)
+    dx = jax.ops.segment_sum(ds[:, None] * y[coo.col], coo.row,
+                             num_segments=coo.nrows)
+    dy_ = jax.ops.segment_sum(ds[:, None] * x[coo.row], coo.col,
+                              num_segments=coo.ncols)
+    dg = jax.tree_util.tree_map(jnp.zeros_like, g)
+    return dg, dx, dy_, dh
+
+
+_fusedmm.defvjp(_fwd, _bwd)
+
+
+def fusedmm(g: CachedGraph, x: Array, y: Array, h: Array, *,
+            edge_op: str = "softmax") -> Array:
+    """out[i] = Σ_j f(x_i·y_j) h_j over sparsity(A); f ∈ {softmax over the
+    row's neighborhood, sigmoid, none}. Differentiable in x, y, h."""
+    assert edge_op in ("softmax", "sigmoid", "none"), edge_op
+    return _fusedmm(g, x, y, h, edge_op)

@@ -1,0 +1,52 @@
+"""SDDMM — sampled dense-dense matmul over a graph's sparsity pattern.
+
+``sddmm(g, x, y)`` returns per-edge scores s_e = x[row_e] · y[col_e]
+(optionally scaled by A's values). Differentiable in x and y; the backward is
+two SpMM-shaped gathers that reuse the CachedGraph (no transpose at step
+time — same §3.3 discipline as spmm).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cache import CachedGraph
+from repro.kernels.ref import sddmm_coo_ref
+
+Array = Any
+
+__all__ = ["sddmm"]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _sddmm(g: CachedGraph, x: Array, y: Array, scale_by_a: bool) -> Array:
+    return sddmm_coo_ref(g.coo, x, y, scale_by_a=scale_by_a)
+
+
+def _fwd(g, x, y, scale_by_a):
+    return _sddmm(g, x, y, scale_by_a), (g, x, y)
+
+
+def _bwd(scale_by_a, res, ds):
+    g, x, y = res
+    coo = g.coo
+    w = ds * coo.val if scale_by_a else ds
+    w = jnp.where(coo.valid_mask(), w, 0.0)
+    dx = jax.ops.segment_sum(w[:, None] * y[coo.col], coo.row,
+                             num_segments=coo.nrows)
+    dy_ = jax.ops.segment_sum(w[:, None] * x[coo.row], coo.col,
+                              num_segments=coo.ncols)
+    dg = jax.tree_util.tree_map(jnp.zeros_like, g)
+    return dg, dx, dy_
+
+
+_sddmm.defvjp(_fwd, _bwd)
+
+
+def sddmm(g: CachedGraph, x: Array, y: Array, *, scale_by_a: bool = True
+          ) -> Array:
+    """Per-edge scores (nnz_padded,), zero on padding slots."""
+    return _sddmm(g, x, y, scale_by_a)

@@ -1,0 +1,86 @@
+"""Semiring definitions for generalized sparse-dense matmul (paper §3.4).
+
+A semiring here is the pair (⊕ reduce, ⊗ combine) applied as
+
+    out[i, :] = ⊕_{j : A_ij != 0}  (A_ij ⊗ H[j, :])
+
+Supported reductions (paper's matmul interface): 'sum', 'mean', 'min', 'max'.
+Supported combines: 'mul' (weighted messages, the default), 'add'
+(FusedMM-style score shifting) and 'second' (ignore A's value — unweighted
+pooling as in GraphSAGE max-pool aggregation).
+
+Per the paper, only the **sum** reduction has generated-kernel (Pallas/MXU)
+support; mean is sum + cached inverse-degree scaling; min/max always take the
+trusted (XLA segment-op) path. The autotuner enforces this.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Semiring", "get_semiring", "REDUCTIONS", "COMBINES"]
+
+REDUCTIONS = ("sum", "mean", "max", "min")
+COMBINES = ("mul", "add", "second")
+
+
+def _combine(name: str) -> Callable:
+    if name == "mul":
+        return lambda a, h: a * h
+    if name == "add":
+        return lambda a, h: a + h
+    if name == "second":
+        return lambda a, h: h
+    raise ValueError(f"unknown combine {name!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    reduce: str           # ⊕
+    combine: str = "mul"  # ⊗
+
+    def __post_init__(self):
+        if self.reduce not in REDUCTIONS:
+            raise ValueError(f"reduce must be one of {REDUCTIONS}")
+        if self.combine not in COMBINES:
+            raise ValueError(f"combine must be one of {COMBINES}")
+
+    # -- identities / masking -------------------------------------------------
+    @property
+    def identity(self) -> float:
+        return {"sum": 0.0, "mean": 0.0, "max": -jnp.inf, "min": jnp.inf}[self.reduce]
+
+    @property
+    def mxu_eligible(self) -> bool:
+        """True iff the generated (MXU matmul) kernel computes this semiring.
+        Mirrors the paper: only sum-reduction has generated-kernel support;
+        mean is post-scaled sum."""
+        return self.reduce in ("sum", "mean") and self.combine == "mul"
+
+    def apply_combine(self, a, h):
+        return _combine(self.combine)(a, h)
+
+    def segment_reduce(self, data, segment_ids, num_segments: int):
+        if self.reduce in ("sum", "mean"):
+            out = jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+        elif self.reduce == "max":
+            out = jax.ops.segment_max(data, segment_ids, num_segments=num_segments)
+        else:
+            out = jax.ops.segment_min(data, segment_ids, num_segments=num_segments)
+        return out
+
+    def finalize(self, out, degrees=None):
+        """Post-reduction fixups: mean-scaling and empty-row identities."""
+        if self.reduce == "mean":
+            assert degrees is not None, "mean reduction needs cached degrees"
+            out = out * (1.0 / jnp.maximum(degrees, 1.0))[:, None]
+        if self.reduce in ("max", "min"):
+            out = jnp.where(jnp.isinf(out), 0.0, out)  # empty rows -> 0 (PyG convention)
+        return out
+
+
+def get_semiring(reduce: str = "sum", combine: str = "mul") -> Semiring:
+    return Semiring(reduce=reduce, combine=combine)

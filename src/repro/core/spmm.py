@@ -1,0 +1,158 @@
+"""Generalized semiring SpMM with cache-enabled backpropagation.
+
+This is the paper's `matmul` (§3.5) plus its two speed mechanisms:
+
+* §3.2 — the autotuned kernel plan decides per (graph, K, semiring) whether
+  the generated (BSR/MXU or ELL) kernel or the trusted (XLA segment-op)
+  kernel runs; non-lane-aligned K always takes the trusted path, mirroring
+  "when the embedding dimension is not a multiple of VLEN, we use a trusted
+  kernel".
+* §3.3 — cached backpropagation: the backward operand A^T (and the
+  normalization/degree vectors) come from the :class:`CachedGraph` built once
+  per graph, so no transpose, sort, or normalization happens inside the
+  training step. The uncached baseline in ``baselines.py`` is the
+  PyTorch-equivalent comparison point.
+
+Gradients: only the dense operand is differentiated (the adjacency is
+training-static in every GNN the paper targets); the custom_vjp returns a
+zero cotangent for the graph, which XLA dead-code-eliminates.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cache import CachedGraph, build_cached_graph
+from repro.core.semiring import Semiring, get_semiring
+from repro.core import sparse as sp
+from repro.kernels import ops as kops
+from repro.kernels.ref import spmm_coo_ref
+
+Array = Any
+
+__all__ = ["spmm", "matmul"]
+
+_BIG = jnp.iinfo(jnp.int32).max
+
+
+def _lane_aligned(k: int) -> bool:
+    return k % 128 == 0
+
+
+def _generated_ok(g: CachedGraph, sr: Semiring, k: int) -> bool:
+    return (g.plan.wants_bsr and g.bsr is not None
+            and sr.mxu_eligible and _lane_aligned(k))
+
+
+def _forward(g: CachedGraph, h: Array, sr: Semiring, transposed: bool) -> Array:
+    """One SpMM against A (or the *cached* A^T when ``transposed``)."""
+    coo = g.coo_t if transposed else g.coo
+    if _generated_ok(g, sr, h.shape[-1]):
+        bsr = g.bsr_t if transposed else g.bsr
+        out = kops.bsr_spmm(bsr, h, fk=g.plan.fk)[: coo.nrows]
+        if sr.reduce == "mean":
+            inv = g.inv_deg_t if transposed else g.inv_deg
+            out = out * inv[:, None]
+        return out.astype(h.dtype)
+    deg = g.degrees_t if transposed else g.degrees
+    return spmm_coo_ref(coo, h, sr, degrees=deg)
+
+
+def _raw_reduce(g: CachedGraph, h: Array, sr: Semiring) -> Array:
+    """Pre-finalize reduction (needed by the max/min backward)."""
+    coo = g.coo
+    msgs = sr.apply_combine(coo.val[:, None], h[coo.col])
+    fill = jnp.asarray(sr.identity, msgs.dtype)
+    msgs = jnp.where(coo.valid_mask()[:, None], msgs, fill)
+    return sr.segment_reduce(msgs, coo.row, coo.nrows)
+
+
+# --------------------------------------------------------------------------
+# custom_vjp — the cached-backprop boundary
+# --------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _spmm(g: CachedGraph, h: Array, sr: Semiring) -> Array:
+    return _forward(g, h, sr, transposed=False)
+
+
+def _spmm_fwd(g, h, sr):
+    if sr.reduce in ("max", "min"):
+        raw = _raw_reduce(g, h, sr)
+        out = sr.finalize(raw, None)
+        return out, (g, h, raw)
+    return _forward(g, h, sr, transposed=False), (g, None, None)
+
+
+def _spmm_bwd(sr, res, dy):
+    g, h, raw = res
+    if sr.reduce == "sum":
+        dh = _backward_linear(g, dy, sr)
+    elif sr.reduce == "mean":
+        dh = _backward_linear(g, dy * g.inv_deg[:, None], sr)
+    else:
+        dh = _backward_maxmin(g, h, raw, dy, sr)
+    dg = jax.tree_util.tree_map(jnp.zeros_like, g)
+    return dg, dh
+
+
+def _backward_linear(g: CachedGraph, dy: Array, sr: Semiring) -> Array:
+    """dH = A^T · dY (combine='mul') or P^T · dY (pattern only, for
+    combine in {'add','second'}), using the CACHED transpose — §3.3."""
+    sum_sr = get_semiring("sum")
+    if sr.combine == "mul":
+        return _forward(g, dy, sum_sr, transposed=True)
+    # pattern matrix: values ignored by the combine, so backprop with 1s
+    coo_t = g.coo_t
+    ones = jnp.where(coo_t.valid_mask(), 1.0, 0.0).astype(dy.dtype)
+    pat = coo_t.with_values(ones)
+    return spmm_coo_ref(pat, dy, sum_sr)
+
+
+def _backward_maxmin(g: CachedGraph, h: Array, raw: Array, dy: Array,
+                     sr: Semiring) -> Array:
+    """Subgradient: route dy[i,k] to the first edge attaining the extremum.
+    Recompute-based (no O(nnz·K) residual is stored)."""
+    coo = g.coo
+    msgs = sr.apply_combine(coo.val[:, None], h[coo.col])        # (nnz, K)
+    valid = coo.valid_mask()[:, None]
+    hit = valid & (msgs == raw[coo.row])                          # (nnz, K)
+    eid = jnp.arange(coo.nnz_padded, dtype=jnp.int32)[:, None]
+    cand = jnp.where(hit, eid, _BIG)
+    winner = jax.ops.segment_min(cand, coo.row, num_segments=coo.nrows)
+    is_winner = winner[coo.row] == eid                            # (nnz, K)
+    contrib = jnp.where(is_winner, dy[coo.row], 0.0)
+    if sr.combine == "mul":
+        contrib = contrib * coo.val[:, None]
+    return jax.ops.segment_sum(contrib, coo.col, num_segments=coo.ncols)
+
+
+_spmm.defvjp(_spmm_fwd, _spmm_bwd)
+
+
+# --------------------------------------------------------------------------
+# Public API
+# --------------------------------------------------------------------------
+
+def spmm(g: CachedGraph, h: Array, reduce: str = "sum",
+         combine: str = "mul") -> Array:
+    """out[i,:] = ⊕_{j: A_ij≠0} (A_ij ⊗ h[j,:]) — differentiable in ``h``."""
+    return _spmm(g, h, get_semiring(reduce, combine))
+
+
+def matmul(a, h: Array, reduce: str = "sum") -> Array:
+    """The paper's user-facing interface (§3.5): ``matmul(sparse, dense,
+    reduce)``. Accepts a CachedGraph (preferred: one-time tuning + caching)
+    or a raw CSR/COO (a CachedGraph is built ad hoc, untuned — the
+    "two lines of code" path still works, just without the tuner)."""
+    if isinstance(a, CachedGraph):
+        return spmm(a, h, reduce=reduce)
+    if isinstance(a, sp.CSR):
+        a = a.to_coo()
+    if isinstance(a, sp.COO):
+        g = build_cached_graph(a, tune=False)
+        return spmm(g, h, reduce=reduce)
+    raise TypeError(f"unsupported sparse operand {type(a)}")

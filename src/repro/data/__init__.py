@@ -1,0 +1,6 @@
+from repro.data.graphs import (GraphDataset, DATASETS, make_dataset,
+                               rmat_edges, dataset_names)
+from repro.data.tokens import synthetic_lm_batch, token_stream
+
+__all__ = ["GraphDataset", "DATASETS", "make_dataset", "rmat_edges",
+           "dataset_names", "synthetic_lm_batch", "token_stream"]

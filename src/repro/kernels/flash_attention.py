@@ -1,0 +1,127 @@
+"""Blockwise (flash) attention Pallas TPU kernel — LM prefill path.
+
+Causal / sliding-window attention with online softmax; GQA served by index-
+map head folding (KV tiles are routed per query head group, never repeated in
+memory). Grid: ``(batch*q_heads, q_tiles, kv_tiles)`` with kv innermost and
+sequential so the (bq, d) accumulator and (bq, 128) stats tiles stay resident.
+
+The fully-masked kv tiles of the causal lower triangle are skipped via
+in-kernel early exit (pl.when on the tile-level causal test), which is where
+the 2x FLOP saving of causal flash comes from.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_pallas"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, out_ref, m_ref, z_ref, acc_ref, *,
+            scale: float, causal: bool, window, bq: int, bk: int,
+            kv_tiles: int, q_offset: int):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        z_ref[...] = jnp.zeros_like(z_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qpos_lo = qi * bq + q_offset          # first absolute q position of tile
+    kpos_lo = ki * bk
+    # tile-level skip tests (static shapes, dynamic predicate)
+    needed = True
+    if causal:
+        needed = jnp.asarray(kpos_lo <= qpos_lo + bq - 1)
+    if window is not None:
+        needed = jnp.logical_and(
+            needed, jnp.asarray(kpos_lo + bk - 1 > qpos_lo - window))
+
+    @pl.when(needed)
+    def _compute():
+        s = jax.lax.dot_general(
+            q_ref[0], k_ref[0, 0],
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale        # (bq, bk)
+        qpos = qpos_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = kpos_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+        z_ref[...] = z_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v_ref[0, 0], dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(ki == kv_tiles - 1)
+    def _flush():
+        out_ref[0, ...] = (acc_ref[...] / jnp.maximum(z_ref[:, :1], 1e-30)
+                           ).astype(out_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: int | None = None, bq: int = 256,
+                           bk: int = 256, scale: float | None = None,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q: (B, Hq, S, D); k, v: (B, Hkv, T, D); Hq % Hkv == 0.
+    Query positions are aligned to the END of the kv axis (decode-friendly)."""
+    b, hq, s, d = q.shape
+    _, hkv, t, _ = k.shape
+    assert hq % hkv == 0
+    rep = hq // hkv
+    scale = scale if scale is not None else float(1.0 / d ** 0.5)
+    bq = min(bq, s)
+    bk = min(bk, t)
+    assert s % bq == 0 and t % bk == 0, (s, bq, t, bk)
+    q_offset = t - s
+
+    qf = q.reshape(b * hq, s, d)
+    grid = (b * hq, s // bq, t // bk)
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, bq=bq, bk=bk,
+        kv_tiles=t // bk, q_offset=q_offset)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=0,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+                pl.BlockSpec((1, 1, bk, d),
+                             lambda bh, qi, ki: (bh // hq, (bh % hq) // rep,
+                                                 ki, 0)),
+                pl.BlockSpec((1, 1, bk, d),
+                             lambda bh, qi, ki: (bh // hq, (bh % hq) // rep,
+                                                 ki, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, bq, d), lambda bh, qi, ki: (bh, qi, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((bq, 128), jnp.float32),
+                pltpu.VMEM((bq, 128), jnp.float32),
+                pltpu.VMEM((bq, d), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b * hq, s, d), q.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qf, k, v)
+    return out.reshape(b, hq, s, d)

@@ -1,0 +1,57 @@
+"""Ragged (grouped) GEMM Pallas TPU kernel for MoE expert compute.
+
+After the sparse dispatch (core/dispatch.py) tokens are sorted by expert and
+per-expert counts are padded up to the token-tile size ``tm``, so every
+(tm x D) token tile belongs to exactly one expert. The scalar-prefetched
+``tile_expert`` array routes the weight BlockSpec: grid step (m, n) multiplies
+token tile m against expert ``tile_expert[m]``'s (D x tn) weight tile. This is
+the megablox idea specialized to tile-aligned groups — alignment is bought at
+dispatch time (zero-token padding) instead of masked epilogues, which keeps
+every MXU pass dense.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ragged_gemm_pallas"]
+
+
+def _kernel(tile_expert_ref, x_ref, w_ref, out_ref):
+    del tile_expert_ref
+    out_ref[...] = jnp.dot(x_ref[...], w_ref[0],
+                           preferred_element_type=jnp.float32
+                           ).astype(out_ref.dtype)
+
+
+def ragged_gemm_pallas(x: jnp.ndarray, w: jnp.ndarray,
+                       tile_expert: jnp.ndarray, *, tm: int = 128,
+                       tn: int = 256, interpret: bool = False) -> jnp.ndarray:
+    """x: (T, D) expert-sorted tokens, T % tm == 0; w: (E, D, F);
+    tile_expert: (T // tm,) int32. Returns (T, F) = x @ w[expert(token)]."""
+    t, dmodel = x.shape
+    e, _, f = w.shape
+    assert t % tm == 0, (t, tm)
+    tn = min(tn, f)
+    assert f % tn == 0, (f, tn)
+
+    grid = (t // tm, f // tn)
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tm, dmodel), lambda m, n, te: (m, 0)),
+                pl.BlockSpec((1, dmodel, tn), lambda m, n, te: (te[m], 0, n)),
+            ],
+            out_specs=pl.BlockSpec((tm, tn), lambda m, n, te: (m, n)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((t, f), x.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(tile_expert, x, w)

@@ -1,0 +1,199 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the ground truth for correctness tests (Pallas kernels are swept
+against them in interpret mode) AND the production "trusted" path — the
+paper's terminology for the generic kernel that handles any (K, semiring,
+sparsity) point the generated kernels don't cover.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+
+if TYPE_CHECKING:  # annotation-only: avoids core<->kernels circular import
+    from repro.core.semiring import Semiring
+    from repro.core.sparse import BSR, COO, ELL
+
+__all__ = [
+    "spmm_coo_ref",
+    "spmm_dense_ref",
+    "spmm_ell_ref",
+    "bsr_spmm_ref",
+    "sddmm_coo_ref",
+    "sddmm_bsr_ref",
+    "fusedmm_softmax_ref",
+    "fusedmm_coo_ref",
+    "flash_attention_ref",
+]
+
+
+# --------------------------------------------------------------------------
+# SpMM
+# --------------------------------------------------------------------------
+
+def spmm_coo_ref(a: COO, h: jnp.ndarray, sr: Semiring, degrees=None) -> jnp.ndarray:
+    """out[i] = ⊕_{(i,j) in A} A_ij ⊗ h[j]  — XLA segment-op path."""
+    msgs = sr.apply_combine(a.val[:, None], h[a.col])  # (nnz, K)
+    if sr.reduce in ("max", "min"):
+        fill = jnp.asarray(sr.identity, msgs.dtype)
+        msgs = jnp.where(a.valid_mask()[:, None], msgs, fill)
+    out = sr.segment_reduce(msgs, a.row, a.nrows)
+    return sr.finalize(out, degrees)
+
+
+def spmm_dense_ref(a_dense: jnp.ndarray, h: jnp.ndarray, sr: Semiring,
+                   degrees=None) -> jnp.ndarray:
+    """Densified oracle (small shapes only)."""
+    mask = a_dense != 0
+    msg = sr.apply_combine(a_dense[:, :, None], h[None, :, :])  # (N, M, K)
+    if sr.reduce in ("sum", "mean"):
+        out = jnp.where(mask[:, :, None], msg, 0).sum(axis=1)
+    elif sr.reduce == "max":
+        out = jnp.where(mask[:, :, None], msg, -jnp.inf).max(axis=1)
+    else:
+        out = jnp.where(mask[:, :, None], msg, jnp.inf).min(axis=1)
+    if degrees is None and sr.reduce == "mean":
+        degrees = mask.sum(axis=1).astype(h.dtype)
+    return sr.finalize(out, degrees)
+
+
+def spmm_ell_ref(a: ELL, h: jnp.ndarray, sr: Semiring, degrees=None) -> jnp.ndarray:
+    gathered = jnp.take(h, a.idx, axis=0, mode="fill", fill_value=0)  # (N, D, K)
+    msg = sr.apply_combine(a.val[:, :, None], gathered)
+    valid = a.pad_mask()[:, :, None]
+    if sr.reduce in ("sum", "mean"):
+        out = jnp.where(valid, msg, 0).sum(axis=1)
+    elif sr.reduce == "max":
+        out = jnp.where(valid, msg, -jnp.inf).max(axis=1)
+    else:
+        out = jnp.where(valid, msg, jnp.inf).min(axis=1)
+    return sr.finalize(out, degrees)
+
+
+def bsr_spmm_ref(a: BSR, h: jnp.ndarray, scale=None) -> jnp.ndarray:
+    """Sum-semiring block-sparse oracle: loops blocks with dense matmuls.
+    ``scale``: optional per-row post-scale (mean semiring / GCN norm)."""
+    n_bk = h.shape[1]
+    out = jnp.zeros((a.nrows, n_bk), jnp.promote_types(a.blocks.dtype, h.dtype))
+
+    def step(i, out):
+        hblk = jax.lax.dynamic_slice(h, (a.blk_col[i] * a.bc, 0), (a.bc, n_bk))
+        contrib = a.blocks[i] @ hblk
+        r = a.blk_row[i] * a.br
+        cur = jax.lax.dynamic_slice(out, (r, 0), (a.br, n_bk))
+        return jax.lax.dynamic_update_slice(out, cur + contrib, (r, 0))
+
+    out = jax.lax.fori_loop(0, a.nblocks, step, out)
+    if scale is not None:
+        out = out * scale[:, None]
+    return out
+
+
+# --------------------------------------------------------------------------
+# SDDMM:  S_ij = (x_i · y_j) * A_ij   for (i,j) in sparsity(A)
+# --------------------------------------------------------------------------
+
+def sddmm_coo_ref(a: COO, x: jnp.ndarray, y: jnp.ndarray,
+                  scale_by_a: bool = True) -> jnp.ndarray:
+    """Returns per-edge scores (nnz,). x: (N, D), y: (M, D)."""
+    s = jnp.sum(x[a.row] * y[a.col], axis=-1)
+    if scale_by_a:
+        s = s * a.val
+    return jnp.where(a.valid_mask(), s, 0)
+
+
+def sddmm_bsr_ref(a: BSR, x: jnp.ndarray, y: jnp.ndarray,
+                  scale_by_a: bool = True) -> jnp.ndarray:
+    """Returns block scores (nblocks, br, bc)."""
+    def one(i):
+        xb = jax.lax.dynamic_slice(x, (a.blk_row[i] * a.br, 0), (a.br, x.shape[1]))
+        yb = jax.lax.dynamic_slice(y, (a.blk_col[i] * a.bc, 0), (a.bc, y.shape[1]))
+        s = xb @ yb.T
+        return s * a.blocks[i] if scale_by_a else s
+
+    return jax.vmap(one)(jnp.arange(a.nblocks))
+
+
+# --------------------------------------------------------------------------
+# FusedMM: SDDMM -> edge nonlinearity -> SpMM, no materialized edge tensor
+# (materialization IS allowed in the oracle; the kernel must avoid it)
+# --------------------------------------------------------------------------
+
+def fusedmm_coo_ref(a: COO, x: jnp.ndarray, y: jnp.ndarray, h: jnp.ndarray,
+                    edge_op: str = "softmax") -> jnp.ndarray:
+    """out[i] = Σ_j  f(x_i·y_j)  h_j  over sparsity(A); f per edge_op.
+    softmax normalizes over each row's neighborhood (graph attention)."""
+    s = sddmm_coo_ref(a, x, y, scale_by_a=False)
+    valid = a.valid_mask()
+    if edge_op == "softmax":
+        neg = jnp.asarray(-jnp.inf, s.dtype)
+        s = jnp.where(valid, s, neg)
+        m = jax.ops.segment_max(s, a.row, num_segments=a.nrows)
+        m = jnp.where(jnp.isinf(m), 0.0, m)
+        e = jnp.where(valid, jnp.exp(s - m[a.row]), 0.0)
+        z = jax.ops.segment_sum(e, a.row, num_segments=a.nrows)
+        w = e / jnp.maximum(z, 1e-30)[a.row]
+    elif edge_op == "sigmoid":
+        w = jnp.where(valid, jax.nn.sigmoid(s), 0.0)
+    elif edge_op == "none":
+        w = jnp.where(valid, s, 0.0)
+    else:
+        raise ValueError(edge_op)
+    return jax.ops.segment_sum(w[:, None] * h[a.col], a.row, num_segments=a.nrows)
+
+
+def fusedmm_softmax_ref(a: BSR, x: jnp.ndarray, y: jnp.ndarray,
+                        h: jnp.ndarray) -> jnp.ndarray:
+    """Block-sparse graph-attention oracle (materializes scores; fine for
+    tests). Pad blocks are all-zero -> masked out."""
+    scores = sddmm_bsr_ref(a, x, y, scale_by_a=False)          # (nb, br, bc)
+    mask = a.blocks != 0
+    neg = jnp.asarray(-jnp.inf, scores.dtype)
+    scores = jnp.where(mask, scores, neg)
+
+    # row-max over all blocks in each block row
+    n_brows = a.n_block_rows
+    flat_max = scores.max(axis=2)                               # (nb, br)
+    m = jnp.full((n_brows, a.br), -jnp.inf).at[a.blk_row].max(flat_max)
+    m_safe = jnp.where(jnp.isinf(m), 0.0, m)
+    e = jnp.where(mask, jnp.exp(scores - m_safe[a.blk_row][:, :, None]), 0.0)
+    z = jnp.zeros((n_brows, a.br)).at[a.blk_row].add(e.sum(axis=2))
+
+    def one(i):
+        hb = jax.lax.dynamic_slice(h, (a.blk_col[i] * a.bc, 0), (a.bc, h.shape[1]))
+        return e[i] @ hb
+
+    num = jnp.zeros((n_brows, a.br, h.shape[1])).at[a.blk_row].add(
+        jax.vmap(one)(jnp.arange(a.nblocks)))
+    out = num / jnp.maximum(z, 1e-30)[:, :, None]
+    return out.reshape(a.nrows, h.shape[1])
+
+
+# --------------------------------------------------------------------------
+# Dense flash-attention oracle (LM side; causal / sliding-window)
+# --------------------------------------------------------------------------
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                        scale: float | None = None) -> jnp.ndarray:
+    """q: (B, Hq, S, D), k/v: (B, Hkv, T, D). GQA by head repetition."""
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(q.dtype)
+    logits = jnp.einsum("bhsd,bhtd->bhst", q, k) * scale
+    t = k.shape[2]
+    qpos = jnp.arange(s)[:, None] + (t - s)   # align ends (decode-friendly)
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    w = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bhtd->bhsd", w, v)

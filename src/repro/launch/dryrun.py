@@ -1,0 +1,257 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be imported/run before any other jax-touching import: the first two
+lines pin 512 placeholder host devices so the production meshes exist.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                 # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+        --shape train_4k --mesh both --out out/dryrun
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# ruff: noqa: E402
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, arch_names
+from repro.configs.base import LM_SHAPES, ModelConfig, ShapeCell, shape_cells_for
+from repro.launch.mesh import make_production_mesh
+from repro.launch import roofline as R
+from repro.train import lm as TL
+
+__all__ = ["run_cell", "serve_capacity", "model_flops", "main"]
+
+
+def serve_capacity(cfg: ModelConfig, cell: ShapeCell) -> int:
+    """KV capacity for serve cells. Rolling-buffer archs cap at their window;
+    hymba's 500k decode caps global layers at an 8k attention-sink window
+    (StreamingLLM-style; DESIGN.md §Shape-cells)."""
+    extra = cfg.n_meta_tokens
+    if cell.kind == "prefill":
+        return cell.seq_len + extra
+    cap = cell.seq_len + extra
+    if cfg.window is not None and not cfg.global_layers:
+        cap = min(cap, cfg.window + 1)
+    if cfg.global_layers and cell.seq_len > (1 << 16):
+        cap = min(cap, 8192)
+    return cap
+
+
+def model_flops(cfg: ModelConfig, cell: ShapeCell) -> float:
+    """MODEL_FLOPS: 6·N_active·tokens (train), 2·N_active·tokens (serve)."""
+    n = cfg.active_param_count()
+    if cell.kind == "train":
+        return 6.0 * n * cell.global_batch * cell.seq_len
+    if cell.kind == "prefill":
+        return 2.0 * n * cell.global_batch * cell.seq_len
+    return 2.0 * n * cell.global_batch           # decode: 1 token/seq
+
+
+def _lower_train(cfg, cell, mesh, accum: int, rules=None):
+    from repro.dist.sharding import use_rules
+    from repro.dist.partition import LM_RULES
+    rules = rules or LM_RULES
+    step, opt = TL.make_train_step(cfg, accum=accum)
+    state = TL.shaped_state(cfg, opt, mesh, rules=rules)
+    batch = TL.shaped_batch(cfg, cell.global_batch, cell.seq_len, mesh,
+                            rules=rules)
+    with mesh, use_rules(rules):
+        return jax.jit(step, donate_argnums=0).lower(state, batch)
+
+
+def _lower_prefill(cfg, cell, mesh, rules=None):
+    from repro.dist.sharding import use_rules
+    from repro.dist.partition import cache_shardings, LM_RULES
+    rules = rules or LM_RULES
+    cap = serve_capacity(cfg, cell)
+    pre = TL.make_prefill_step(cfg, cap)
+    # params only (no optimizer state) for serving
+    params = TL.shaped_state(cfg, TL.adamw(1e-4), mesh, rules=rules).params
+    batch = TL.shaped_batch(cfg, cell.global_batch, cell.seq_len, mesh,
+                            rules=rules)
+    batch.pop("targets", None)
+
+    def pre_constrained(p, b):
+        cache, logits = pre(p, b)
+        from jax import lax
+        sh = cache_shardings(mesh, cache, rules)
+        cache = {k: lax.with_sharding_constraint(v, sh[k])
+                 for k, v in cache.items()}
+        return cache, logits
+
+    with mesh, use_rules(rules):
+        return jax.jit(pre_constrained).lower(params, batch)
+
+
+def _lower_decode(cfg, cell, mesh, rules=None):
+    from repro.dist.sharding import use_rules
+    from repro.dist.partition import batch_shardings, LM_RULES
+    rules = rules or LM_RULES
+    cap = serve_capacity(cfg, cell)
+    dec = TL.make_decode_step(cfg)
+    params = TL.shaped_state(cfg, TL.adamw(1e-4), mesh, rules=rules).params
+    cache = TL.shaped_cache(cfg, cell.global_batch, cap, mesh, rules=rules)
+    tok_sh = batch_shardings(
+        mesh, {"tokens": jax.ShapeDtypeStruct((cell.global_batch, 1),
+                                              jnp_int32())}, rules)
+    tokens = jax.ShapeDtypeStruct((cell.global_batch, 1), jnp_int32(),
+                                  sharding=tok_sh["tokens"])
+    with mesh, use_rules(rules):
+        return jax.jit(dec, donate_argnums=1).lower(params, cache, tokens)
+
+
+def jnp_int32():
+    import jax.numpy as jnp
+    return jnp.int32
+
+
+def _mem_stats(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None
+    if ma is None:
+        return None
+    keys = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "alias_size_in_bytes",
+            "temp_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if "argument_size_in_bytes" in out and "temp_size_in_bytes" in out:
+        out["total_hbm_bytes"] = (out["argument_size_in_bytes"]
+                                  + out["output_size_in_bytes"]
+                                  - out.get("alias_size_in_bytes", 0)
+                                  + out["temp_size_in_bytes"])
+    return out
+
+
+def make_rules(name: str):
+    """Named rule sets for §Perf iterations."""
+    from repro.dist.partition import LM_RULES
+    if name in ("baseline", ""):
+        return LM_RULES
+    if name == "sp":          # sequence parallelism on the residual stream
+        return LM_RULES.override(seq="model")
+    raise KeyError(name)
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, accum: int = 1,
+             verbose: bool = True, rules: str = "baseline",
+             cfg_overrides: dict | None = None):
+    """Lower+compile one cell; returns the roofline report dict."""
+    import dataclasses
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    cell = LM_SHAPES[shape]
+    if cell not in shape_cells_for(cfg):
+        return {"arch": arch, "shape": shape, "skipped": True,
+                "reason": "cell skipped per assignment rules"}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = int(np.prod(list(mesh.shape.values())))
+    rls = make_rules(rules)
+
+    t0 = time.perf_counter()
+    if cell.kind == "train":
+        lowered = _lower_train(cfg, cell, mesh, accum, rules=rls)
+    elif cell.kind == "prefill":
+        lowered = _lower_prefill(cfg, cell, mesh, rules=rls)
+    else:
+        lowered = _lower_decode(cfg, cell, mesh, rules=rls)
+    t_lower = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    hlo = compiled.as_text()
+    rep = R.analyze(arch=arch, shape=shape, mesh_name=mesh_name, chips=chips,
+                    compiled=compiled, hlo_text=hlo,
+                    model_flops_total=model_flops(cfg, cell),
+                    mem_stats=_mem_stats(compiled))
+    row = rep.row()
+    row.update(lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+               mem=rep.mem_per_device,
+               top_collectives=[(k, round(b / 1e6, 2), s)
+                                for k, b, s in rep.coll.top_ops[:5]],
+               coll_by_kind={k: round(v / 1e9, 3)
+                             for k, v in rep.coll.by_kind.items()})
+    if verbose:
+        print(f"[{arch} | {shape} | {mesh_name}] "
+              f"compile {t_compile:.1f}s  "
+              f"compute {row['t_compute_ms']:.2f}ms "
+              f"memory {row['t_memory_ms']:.2f}ms "
+              f"collective {row['t_collective_ms']:.2f}ms "
+              f"-> {row['bottleneck']}  useful={row['useful_ratio']:.3f}",
+              flush=True)
+    return row
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--rules", default="baseline")
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override, e.g. --set ssm_chunk=128")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="out/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=")
+        overrides[k] = int(v) if v.lstrip("-").isdigit() else v
+
+    archs = arch_names() if args.arch == "all" else [args.arch]
+    shapes = list(LM_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}_{shape}_{'multi' if mp else 'single'}"
+                if args.tag:
+                    tag += f"_{args.tag}"
+                path = os.path.join(args.out, tag + ".json")
+                if args.skip_existing and os.path.exists(path):
+                    continue
+                try:
+                    row = run_cell(arch, shape, multi_pod=mp,
+                                   accum=args.accum, rules=args.rules,
+                                   cfg_overrides=overrides or None)
+                except Exception as e:  # a failing cell is a bug: report it
+                    traceback.print_exc()
+                    failures.append((tag, repr(e)))
+                    row = {"arch": arch, "shape": shape, "error": repr(e)}
+                with open(path, "w") as f:
+                    json.dump(row, f, indent=1, default=str)
+    if failures:
+        print(f"\nFAILED cells ({len(failures)}):")
+        for tag, err in failures:
+            print(" ", tag, err[:200])
+        return 1
+    print("\nall requested cells compiled OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,260 @@
+"""Loop-aware analysis of partitioned HLO text.
+
+``compiled.cost_analysis()`` and naive text scans count a while-loop body
+ONCE, but a scanned L-layer transformer executes it L times — flops,
+bytes and collective traffic would be undercounted by ~L. This module
+parses the per-device HLO module into its computations, builds the
+call graph (while bodies/conditions, fusions, to_apply, conditionals),
+extracts each while's trip count from its condition's integer constant, and
+propagates execution multiplicity from ENTRY.
+
+Per computation we count:
+  * dot/convolution FLOPs (shape-exact, via the computation's symbol table);
+  * dot operand/output bytes (an MXU-traffic model for the memory term);
+  * collective wire bytes (ring model: all-reduce 2x payload, reduce-scatter
+    counts its input, all-gather its output, permute/all-to-all 1x).
+
+Used by launch/roofline.py; unit-tested against hand-built scans in
+tests/test_roofline.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+__all__ = ["ModuleStats", "analyze_hlo"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0,
+}
+
+_COMP_HDR = re.compile(r"^\s*(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}]+?)\s+([\w\-]+)(\(|\.)")
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_PARAM_RE = re.compile(r"%?([\w.\-]+):\s*(\([^)]*\)|[\w\[\],]+)")
+_REF_RE = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+_LHS_CDIMS = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_LHS_BDIMS = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+_WINDOW_SIZE = re.compile(r"window=\{size=([\dx]+)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(shape_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class CompStats:
+    dot_flops: float = 0.0
+    dot_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    refs: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    # [(ref_name, kind)] kind in {'while_body','while_cond','call'}
+    max_const: int = 1
+    top_colls: List[Tuple[str, float, str]] = dataclasses.field(
+        default_factory=list)
+
+
+@dataclasses.dataclass
+class ModuleStats:
+    dot_flops: float
+    dot_bytes: float
+    coll_bytes: float
+    coll_by_kind: Dict[str, float]
+    n_collectives: int
+    top_colls: List[Tuple[str, float, str]]
+    multiplicities: Dict[str, float]
+
+
+_COLLS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+          "collective-permute")
+
+
+def _split_computations(text: str) -> Dict[str, Tuple[List[str], bool]]:
+    comps: Dict[str, Tuple[List[str], bool]] = {}
+    cur: List[str] = []
+    name = None
+    is_entry = False
+    for line in text.splitlines():
+        m = _COMP_HDR.match(line)
+        if m and ("->" in line):
+            name = m.group(2)
+            is_entry = bool(m.group(1))
+            cur = [line]
+            comps[name] = (cur, is_entry)
+        elif name is not None:
+            cur.append(line)
+    return comps
+
+
+def _symbols(lines: List[str]) -> Dict[str, str]:
+    """name -> shape-ish string (first line token after '=' or param type)."""
+    syms: Dict[str, str] = {}
+    hdr = lines[0]
+    for pm in _PARAM_RE.finditer(hdr[hdr.find("(") + 1:]):
+        syms[pm.group(1)] = pm.group(2)
+    for ln in lines[1:]:
+        dm = _DEF_RE.match(ln)
+        if dm:
+            syms[dm.group(1)] = dm.group(2)
+    return syms
+
+
+def _analyze_comp(lines: List[str]) -> CompStats:
+    st = CompStats()
+    syms = _symbols(lines)
+    for ln in lines[1:]:
+        dm = _DEF_RE.match(ln)
+        # pair condition/body per line (one while op per line)
+        line_refs = {"body": None, "condition": None}
+        for rm in _REF_RE.finditer(ln):
+            key = rm.group(0).split("=")[0]
+            if key in ("body", "condition"):
+                line_refs[key] = rm.group(1)
+            else:
+                st.refs.append((rm.group(1), "call"))
+        if line_refs["body"] and line_refs["condition"]:
+            st.refs.append(((line_refs["condition"], line_refs["body"]),
+                            "while"))
+        elif line_refs["body"]:
+            st.refs.append((line_refs["body"], "call"))
+        bm = _BRANCH_RE.search(ln)
+        if bm:
+            for nm in bm.group(1).split(","):
+                st.refs.append((nm.strip().lstrip("%"), "call"))
+        for cm in _CONST_RE.finditer(ln):
+            st.max_const = max(st.max_const, int(cm.group(1)))
+        if not dm:
+            continue
+        out_shape, op = dm.group(2), dm.group(3)
+
+        if op in _COLLS or any(ln.strip().find(f" {c}(") > 0 or
+                               ln.strip().find(f" {c}-start(") > 0
+                               for c in _COLLS if op.startswith(c)):
+            base = next((c for c in _COLLS if op.startswith(c)), None)
+            if base is None:
+                continue
+            if base == "reduce-scatter":
+                opnds = _operand_names(ln)
+                b = sum(_shape_bytes(syms.get(o, "")) for o in opnds) \
+                    or _shape_bytes(out_shape)
+            else:
+                b = _shape_bytes(out_shape)
+            if base == "all-reduce":
+                b *= 2.0
+            st.coll_bytes += b
+            st.coll_by_kind[base] = st.coll_by_kind.get(base, 0.0) + b
+            st.top_colls.append((base, b, out_shape[:60]))
+        elif op == "dot":
+            _, out_dims = _first_shape_dims(out_shape)
+            out_elems = 1
+            for d in out_dims:
+                out_elems *= d
+            opnds = _operand_names(ln)
+            lhs_shape = syms.get(opnds[0], "") if opnds else ""
+            _, lhs_dims = _first_shape_dims(lhs_shape)
+            cd = _LHS_CDIMS.search(ln)
+            k = 1
+            if cd and lhs_dims:
+                for i in (int(x) for x in cd.group(1).split(",") if x):
+                    if i < len(lhs_dims):
+                        k *= lhs_dims[i]
+            st.dot_flops += 2.0 * out_elems * k
+            st.dot_bytes += _shape_bytes(out_shape) + sum(
+                _shape_bytes(syms.get(o, "")) for o in opnds)
+        elif op == "convolution":
+            _, out_dims = _first_shape_dims(out_shape)
+            out_elems = 1
+            for d in out_dims:
+                out_elems *= d
+            wm = _WINDOW_SIZE.search(ln)
+            k = 1
+            if wm:
+                for d in wm.group(1).split("x"):
+                    k *= int(d)
+            st.dot_flops += 2.0 * out_elems * k
+    return st
+
+
+def _operand_names(ln: str) -> List[str]:
+    # operands of `op(...)`: first paren group after the op name
+    idx = ln.find("(", ln.find("=") + 1)
+    if idx < 0:
+        return []
+    depth, j = 0, idx
+    for j in range(idx, len(ln)):
+        if ln[j] == "(":
+            depth += 1
+        elif ln[j] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    inner = ln[idx + 1:j]
+    return re.findall(r"%([\w.\-]+)", inner)
+
+
+def analyze_hlo(text: str) -> ModuleStats:
+    comps = _split_computations(text)
+    stats = {name: _analyze_comp(lines) for name, (lines, _) in comps.items()}
+    entry = next((n for n, (_, e) in comps.items() if e), None)
+
+    mult: Dict[str, float] = {}
+
+    def visit(name: str, m: float):
+        if name not in stats:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        st = stats[name]
+        for ref, kind in st.refs:
+            if kind == "while":
+                cond, body = ref
+                trip = max(stats[cond].max_const, 1) if cond in stats else 1
+                visit(body, m * trip)
+            else:
+                visit(ref, m)
+
+    if entry:
+        visit(entry, 1.0)
+
+    tot = ModuleStats(dot_flops=0.0, dot_bytes=0.0, coll_bytes=0.0,
+                      coll_by_kind={}, n_collectives=0, top_colls=[],
+                      multiplicities=mult)
+    for name, st in stats.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        tot.dot_flops += st.dot_flops * m
+        tot.dot_bytes += st.dot_bytes * m
+        tot.coll_bytes += st.coll_bytes * m
+        for k, v in st.coll_by_kind.items():
+            tot.coll_by_kind[k] = tot.coll_by_kind.get(k, 0.0) + v * m
+        tot.n_collectives += len(st.top_colls)
+        tot.top_colls.extend((k, b * m, s) for k, b, s in st.top_colls)
+    tot.top_colls.sort(key=lambda t: -t[1])
+    tot.top_colls = tot.top_colls[:10]
+    return tot

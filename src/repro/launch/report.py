@@ -1,0 +1,63 @@
+"""Aggregate dry-run JSONs into the §Dry-run / §Roofline markdown tables."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_rows(d: str) -> list[dict]:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_table(rows: list[dict], mesh: str) -> str:
+    hdr = ("| arch | shape | compute ms | memory ms | collective ms | "
+           "bottleneck | useful | HBM GB/chip |\n"
+           "|---|---|---|---|---|---|---|---|\n")
+    out = [hdr]
+    for r in rows:
+        if r.get("skipped") or r.get("error") or r.get("mesh") != mesh:
+            continue
+        mem = (r.get("mem") or {}).get("total_hbm_bytes")
+        mem_s = f"{mem / 2**30:.1f}" if mem else "-"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_ms']:.2f} | "
+            f"{r['t_memory_ms']:.2f} | {r['t_collective_ms']:.2f} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.3f} | {mem_s} |\n")
+    return "".join(out)
+
+
+def fmt_skips(rows: list[dict]) -> str:
+    out = []
+    seen = set()
+    for r in rows:
+        if r.get("skipped") and (r["arch"], r["shape"]) not in seen:
+            seen.add((r["arch"], r["shape"]))
+            out.append(f"* {r['arch']} x {r['shape']} — {r['reason']}\n")
+    return "".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="out/dryrun")
+    args = ap.parse_args()
+    rows = load_rows(args.dir)
+    n_ok = sum(1 for r in rows if not r.get("skipped") and not r.get("error"))
+    n_err = sum(1 for r in rows if r.get("error"))
+    print(f"## compiled cells: {n_ok} OK, {n_err} failed, "
+          f"{sum(1 for r in rows if r.get('skipped'))} skipped\n")
+    print("### single pod (16x16 = 256 chips)\n")
+    print(fmt_table(rows, "16x16"))
+    print("\n### multi-pod (2x16x16 = 512 chips)\n")
+    print(fmt_table(rows, "2x16x16"))
+    print("\n### skipped cells\n")
+    print(fmt_skips(rows))
+
+
+if __name__ == "__main__":
+    main()

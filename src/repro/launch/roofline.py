@@ -1,0 +1,172 @@
+"""Roofline analysis from compiled (AOT) artifacts — no hardware execution.
+
+Three terms per (arch, shape, mesh), all in seconds-per-step-per-chip:
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_wire_bytes_per_chip / ICI_bw
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (the partitioned,
+per-device module). Collective bytes are parsed from the partitioned HLO
+text: for each all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute op we take its tensor bytes with a ring-model multiplier
+(all-reduce moves ~2x its payload; the others ~1x; (n-1)/n ≈ 1 at n=16+).
+
+Also reported: MODEL_FLOPS (6·N_active·D for train, 2·N_active·D for
+serve) and its ratio to HLO FLOPs — the "useful compute" fraction that
+catches remat/duplication waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.autotune import HardwareModel
+
+__all__ = ["CollectiveStats", "RooflineReport", "collective_bytes",
+           "analyze", "hlo_flops_bytes"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+\[[\d,]*\][^\s]*))\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+_MULTIPLIER = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _tensor_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    total_bytes: float            # wire bytes per chip per step (ring model)
+    by_kind: dict                 # kind -> bytes
+    count: int
+    top_ops: list                 # [(kind, bytes, shape_str), ...] largest 8
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    by_kind: dict = {}
+    ops = []
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str = m.group(1) or m.group(2)
+        kind = m.group(3)
+        b = _tensor_bytes(shape_str) * _MULTIPLIER[kind]
+        by_kind[kind] = by_kind.get(kind, 0.0) + b
+        ops.append((kind, b, shape_str[:80]))
+    ops.sort(key=lambda t: -t[1])
+    return CollectiveStats(total_bytes=sum(by_kind.values()),
+                           by_kind=by_kind, count=len(ops),
+                           top_ops=ops[:8])
+
+
+def hlo_flops_bytes(compiled) -> tuple[float, float]:
+    """(flops, bytes accessed) from cost_analysis; 0.0 when unavailable."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return 0.0, 0.0
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0))
+    nbytes = sum(float(v) for k, v in ca.items()
+                 if "bytes accessed" in k and not k.startswith("utilization"))
+    # 'bytes accessed' alone is the total; per-operand keys double-count
+    if "bytes accessed" in ca:
+        nbytes = float(ca["bytes accessed"])
+    return flops, nbytes
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float              # per chip
+    hlo_bytes: float              # per chip
+    coll: CollectiveStats
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops_total: float      # whole step, all chips
+    useful_ratio: float           # model_flops / (hlo_flops * chips)
+    bottleneck: str
+    mem_per_device: Optional[dict] = None
+
+    @property
+    def t_step(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the step the dominant *useful* term explains: how
+        close the step is to its own hardware bound."""
+        tot = self.t_compute + self.t_memory + self.t_collective
+        return self.t_step / tot if tot else 0.0
+
+    def row(self) -> dict:
+        return dict(arch=self.arch, shape=self.shape, mesh=self.mesh,
+                    chips=self.chips, hlo_gflops=self.hlo_flops / 1e9,
+                    hlo_gbytes=self.hlo_bytes / 1e9,
+                    coll_gbytes=self.coll.total_bytes / 1e9,
+                    t_compute_ms=self.t_compute * 1e3,
+                    t_memory_ms=self.t_memory * 1e3,
+                    t_collective_ms=self.t_collective * 1e3,
+                    bottleneck=self.bottleneck,
+                    useful_ratio=round(self.useful_ratio, 4))
+
+
+def analyze(*, arch: str, shape: str, mesh_name: str, chips: int,
+            compiled, hlo_text: str, model_flops_total: float,
+            hw: HardwareModel | None = None,
+            mem_stats: Optional[dict] = None) -> RooflineReport:
+    """Loop-aware three-term roofline. FLOPs/bytes take the max of
+    cost_analysis (elementwise-complete but loop-blind) and the HLO-text
+    analyzer (loop-aware dot/conv + collective counts)."""
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    hw = hw or HardwareModel()
+    ca_flops, ca_bytes = hlo_flops_bytes(compiled)
+    mod = analyze_hlo(hlo_text)
+    flops = max(ca_flops, mod.dot_flops)
+    nbytes = max(ca_bytes, mod.dot_bytes)
+    coll = CollectiveStats(
+        total_bytes=mod.coll_bytes, by_kind=mod.coll_by_kind,
+        count=mod.n_collectives,
+        top_ops=[(k, b, s) for k, b, s in mod.top_colls])
+    t_c = flops / hw.peak_flops
+    t_m = nbytes / hw.hbm_bw
+    t_x = coll.total_bytes / hw.ici_bw
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    useful = (model_flops_total / (flops * chips)) if flops else 0.0
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=nbytes, coll=coll,
+        t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        model_flops_total=model_flops_total, useful_ratio=useful,
+        bottleneck=bottleneck, mem_per_device=mem_stats)

@@ -1,0 +1,54 @@
+"""GraphBundle — everything a GNN model needs about one graph, prebuilt.
+
+Holds BOTH execution paths' operands so patch()/unpatch() can flip between
+them without rebuilding anything:
+
+* tuned path (iSpLib): CachedGraph over the raw adjacency (SAGE/GIN/GAT
+  aggregation) and over the GCN-normalized adjacency — normalization cached
+  per §3.3, kernel plan per §3.2;
+* baseline path (PT-equivalent): the raw COOs; normalization and degrees are
+  recomputed inside the step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+
+from repro.core import sparse as sp
+from repro.core.autotune import KernelPlan
+from repro.core.cache import CachedGraph, build_cached_graph
+
+__all__ = ["GraphBundle", "build_bundle"]
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["tuned", "tuned_norm", "raw", "raw_sl"],
+         meta_fields=[])
+@dataclasses.dataclass(frozen=True)
+class GraphBundle:
+    tuned: CachedGraph          # raw adjacency, tuned plan
+    tuned_norm: CachedGraph     # D^-1/2 (A+I) D^-1/2, cached (GCN)
+    raw: sp.COO                 # baseline operand
+    raw_sl: sp.COO              # baseline operand incl. self loops
+
+    @property
+    def num_nodes(self) -> int:
+        return self.raw.nrows
+
+
+def build_bundle(dataset, *, k_hint: int = 128, tune: bool = True,
+                 measure: bool = False,
+                 plan: Optional[KernelPlan] = None) -> GraphBundle:
+    """One-time host-side preprocessing for a GraphDataset."""
+    a_norm = sp.gcn_normalize(dataset.coo, add_self_loops=True)
+    return GraphBundle(
+        tuned=build_cached_graph(dataset.coo, k_hint=k_hint, tune=tune,
+                                 measure=measure, plan=plan),
+        tuned_norm=build_cached_graph(a_norm, k_hint=k_hint, tune=tune,
+                                      measure=measure, plan=plan),
+        raw=dataset.coo,
+        raw_sl=dataset.coo_sl,
+    )

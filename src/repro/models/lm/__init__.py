@@ -1,0 +1,10 @@
+# Lazy exports: transformer pulls in every family; import it on demand so
+# submodules (mamba2, attention) stay importable in isolation.
+import importlib
+
+
+def __getattr__(name):
+    mod = importlib.import_module("repro.models.lm.transformer")
+    if name == "transformer":
+        return mod
+    return getattr(mod, name)

@@ -1,0 +1,195 @@
+"""Attention: GQA with RoPE, chunked (flash-style) prefill/train path,
+rolling-buffer KV-cache decode path, sliding-window + per-layer override.
+
+The train/prefill path is ``chunked_attention`` — a lax.scan over KV chunks
+with running max/denominator, so the S×T score matrix never materializes
+(O(S·chunk) live memory). On TPU the Pallas flash kernel
+(kernels/flash_attention.py) implements the same math; the chunked form is
+what the multi-pod dry-run lowers (backend-portable, GSPMD-friendly) and is
+also the Pallas kernel's second oracle.
+
+GQA is computed in grouped form (B, KV, G, S, D) — KV heads are never
+repeated in memory.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_constraint
+
+Array = Any
+
+__all__ = ["chunked_attention", "banded_attention", "decode_attention",
+           "KVSlice"]
+
+_NEG = -1e30
+
+
+def _group(q: Array, n_kv: int) -> Array:
+    """(B, Hq, S, D) -> (B, KV, G, S, D)"""
+    b, hq, s, d = q.shape
+    return q.reshape(b, n_kv, hq // n_kv, s, d)
+
+
+def chunked_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                      window: int | None = None, chunk: int = 1024,
+                      scale: float | None = None, meta_len: int = 0) -> Array:
+    """q: (B, Hq, S, D); k/v: (B, KV, T, D); q positions end-aligned to T.
+    Returns (B, Hq, S, D). ``window`` may be a traced int32 scalar (per-layer
+    sliding window delivered by the scan); None disables windowing.
+    ``meta_len``: the first meta_len kv positions are attention sinks (hymba
+    meta tokens) — always visible regardless of the window."""
+    b, hq, s, d = q.shape
+    _, n_kv, t, _ = k.shape
+    scale = scale if scale is not None else 1.0 / d ** 0.5
+    qg = _group(q, n_kv) * scale                     # (B, KV, G, S, D)
+    chunk = min(chunk, t)
+    t_pad = (-t) % chunk
+    if t_pad:   # tail-pad KV; pad slots masked via k_pos < t below
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, t_pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, t_pad), (0, 0)))
+    tp = t + t_pad
+    n_chunks = tp // chunk
+    kc = k.reshape(b, n_kv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, n_kv, n_chunks, chunk, d).transpose(2, 0, 1, 3, 4)
+
+    q_pos = (t - s) + jnp.arange(s)                  # (S,)
+
+    def step(carry, inputs):
+        m, z, acc = carry
+        ci, kci, vci = inputs
+        s_blk = jnp.einsum("bkgsd,bktd->bkgst", qg, kci,
+                           preferred_element_type=jnp.float32)
+        k_pos = ci * chunk + jnp.arange(chunk)       # (chunk,)
+        mask = jnp.broadcast_to((k_pos < t)[None, :], (s, chunk))
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window is not None:
+            in_win = k_pos[None, :] > q_pos[:, None] - window
+            if meta_len:
+                in_win |= (k_pos < meta_len)[None, :]
+            mask &= in_win
+        s_blk = jnp.where(mask[None, None, None], s_blk, _NEG)
+        m_new = jnp.maximum(m, s_blk.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s_blk - m_new[..., None])
+        p = jnp.where(mask[None, None, None], p, 0.0)
+        z = z * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgst,bktd->bkgsd", p.astype(vci.dtype), vci,
+            preferred_element_type=jnp.float32)
+        return (m_new, z, acc), None
+
+    g = hq // n_kv
+    m0 = jnp.full((b, n_kv, g, s), _NEG, jnp.float32)
+    z0 = jnp.zeros((b, n_kv, g, s), jnp.float32)
+    a0 = jnp.zeros((b, n_kv, g, s, d), jnp.float32)
+    (m, z, acc), _ = jax.lax.scan(
+        step, (m0, z0, a0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(z, 1e-30)[..., None]
+    return out.reshape(b, hq, s, d).astype(q.dtype)
+
+
+def banded_attention(q: Array, k: Array, v: Array, *, window: int,
+                     chunk: int = 512, meta_len: int = 0,
+                     scale: float | None = None) -> Array:
+    """Sliding-window attention as BLOCK-BANDED sparse attention.
+
+    ``chunked_attention`` pays O(S·T) for a window that only needs
+    O(S·window): with a *static* window each q tile attends to a fixed band
+    of ceil(window/chunk)+1 kv tiles (plus the meta-token sink prefix) — the
+    paper's adjacency-sparsity insight applied to the attention matrix. Used
+    by the scanned SWA layers (hymba, mixtral); full-attention (global)
+    layers keep the chunked path. Causal, q/k same length (train/prefill).
+    """
+    b, hq, s, d = q.shape
+    _, n_kv, t, _ = k.shape
+    assert s == t, "banded path is for train/prefill (q covers the kv axis)"
+    scale = scale if scale is not None else 1.0 / d ** 0.5
+    c = min(chunk, t)
+    pad = (-t) % c
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    tp = t + pad
+    nq = tp // c
+    nb = min(window // c + 2, nq)            # band tiles per q tile
+    g = hq // n_kv
+    qg = (_group(q, n_kv) * scale).reshape(b, n_kv, g, nq, c, d)
+    has_meta = meta_len > 0
+
+    def one_tile(_, qi):
+        q_t = qg[:, :, :, qi]                              # (B,KV,G,c,D)
+        s0 = jnp.maximum(qi - (nb - 1), 0)
+        k_band = jax.lax.dynamic_slice(
+            k, (0, 0, s0 * c, 0), (b, n_kv, nb * c, d))
+        v_band = jax.lax.dynamic_slice(
+            v, (0, 0, s0 * c, 0), (b, n_kv, nb * c, d))
+        q_pos = qi * c + jnp.arange(c)
+        k_pos = s0 * c + jnp.arange(nb * c)
+        in_win = k_pos[None] > q_pos[:, None] - window
+        if has_meta:   # sinks are always visible (subject to causality)
+            in_win = in_win | (k_pos[None] < meta_len)
+        mask = (k_pos[None] <= q_pos[:, None]) & in_win & (k_pos[None] < t)
+        if has_meta:
+            mc = -(-meta_len // c) * c              # sink prefix, tile-padded
+            k_meta, v_meta = k[:, :, :mc], v[:, :, :mc]
+            m_pos = jnp.arange(mc)
+            # sink tokens not already covered by the band, causal-masked
+            m_mask = (m_pos[None] < meta_len) & (m_pos[None] < s0 * c) \
+                & (m_pos[None] <= q_pos[:, None])
+            k_band = jnp.concatenate([k_meta, k_band], axis=2)
+            v_band = jnp.concatenate([v_meta, v_band], axis=2)
+            mask = jnp.concatenate([m_mask, mask], axis=1)
+        logits = jnp.einsum("bkgcd,bkld->bkgcl", q_t, k_band,
+                            preferred_element_type=jnp.float32)
+        logits = jnp.where(mask[None, None, None], logits, _NEG)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bkgcl,bkld->bkgcd", w.astype(v_band.dtype), v_band,
+                         preferred_element_type=jnp.float32)
+        return None, out.astype(q.dtype)
+
+    # per-tile remat: the tile backward recomputes its band logits instead of
+    # stacking nq tiles of residuals (peak = one tile's working set)
+    _, outs = jax.lax.scan(jax.checkpoint(one_tile), None, jnp.arange(nq))
+    # outs: (nq, B, KV, G, c, D) -> (B, H, S, D)
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(b, hq, tp, d)
+    return out[:, :, :t]
+
+
+class KVSlice(NamedTuple):
+    """One layer's rolling KV buffer + slot metadata."""
+    k: Array          # (B, KV, C, D)
+    v: Array          # (B, KV, C, D)
+    slot_pos: Array   # (B, C) int32 absolute position stored in each slot,
+                      # -1 if empty
+
+
+def decode_attention(q: Array, kv: KVSlice, pos: Array, *,
+                     window, meta_len: int = 0) -> Array:
+    """One-token attention against a rolling buffer.
+
+    q: (B, Hq, 1, D); pos: (B,) current absolute position (the new token's);
+    window: int32 scalar (FULL_ATTN_WINDOW for full attention). The new
+    token's K/V must already be written into the buffer. Slots holding
+    positions < meta_len are sinks (never window-masked)."""
+    b, hq, _, d = q.shape
+    n_kv = kv.k.shape[1]
+    qg = _group(q, n_kv)[:, :, :, 0]                 # (B, KV, G, D)
+    s = jnp.einsum("bkgd,bkcd->bkgc", qg, kv.k,
+                   preferred_element_type=jnp.float32) / d ** 0.5
+    in_win = kv.slot_pos > pos[:, None] - window
+    if meta_len:
+        in_win |= kv.slot_pos < meta_len
+    valid = (kv.slot_pos >= 0) & (kv.slot_pos <= pos[:, None]) & in_win
+    s = jnp.where(valid[:, None, None], s, _NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bkcd->bkgd", w.astype(kv.v.dtype), kv.v,
+                     preferred_element_type=jnp.float32)
+    out = shard_constraint(out.reshape(b, hq, 1, d).astype(q.dtype),
+                           ("batch", "heads", None, None))
+    return out

@@ -1,0 +1,119 @@
+"""Shared LM building blocks: norms, projections, RoPE, GLU MLP, embeddings.
+
+Functional style, params as nested dicts with stacked (n_layers, ...) leaves
+for lax.scan. Every tensor creation goes through ``pspec``-annotated init so
+the launcher can lay params out per the sharding rules without model-code
+knowledge.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard_constraint
+
+Array = Any
+
+__all__ = ["dtype_of", "rmsnorm", "layernorm", "norm_apply", "rope",
+           "glu_mlp", "init_norm", "init_dense", "init_glu_mlp",
+           "truncated_normal_init", "PARAM_AXES"]
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def truncated_normal_init(key, shape, scale: float, dtype) -> Array:
+    fan_in = shape[0] if len(shape) > 1 else 1
+    std = scale / max(fan_in, 1) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def init_norm(cfg) -> dict:
+    p = {"scale": jnp.ones((cfg.d_model,), jnp.float32)}
+    if cfg.norm == "layer":
+        p["bias"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    return p
+
+
+def rmsnorm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def layernorm(x: Array, scale: Array, bias: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+            ).astype(x.dtype)
+
+
+def norm_apply(cfg, p: dict, x: Array) -> Array:
+    if cfg.norm == "layer":
+        return layernorm(x, p["scale"], p["bias"])
+    return rmsnorm(x, p["scale"])
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """x: (..., S, H, D) rotary over the last dim; positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (jnp.log(theta) / half))               # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                         # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Dense / GLU MLP
+# --------------------------------------------------------------------------
+
+def init_dense(key, in_dim: int, out_dim: int, dtype, *, bias: bool = False,
+               scale: float = 1.0) -> dict:
+    p = {"w": truncated_normal_init(key, (in_dim, out_dim), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def init_glu_mlp(key, cfg) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = dtype_of(cfg)
+    return {"wg": truncated_normal_init(k1, (cfg.d_model, cfg.d_ff), 1.0, dt),
+            "wu": truncated_normal_init(k2, (cfg.d_model, cfg.d_ff), 1.0, dt),
+            "wd": truncated_normal_init(k3, (cfg.d_ff, cfg.d_model), 1.0, dt)}
+
+
+def glu_mlp(cfg, p: dict, x: Array, rules=None) -> Array:
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+    u = jnp.einsum("bsd,df->bsf", x, p["wu"])
+    h = act(g) * u
+    h = shard_constraint(h, ("batch", "seq", "d_ff"))
+    return jnp.einsum("bsf,fd->bsd", h, p["wd"])
+
+
+# Logical axes per parameter path (consumed by the launcher's sharding map).
+# Matched by leaf-name; see dist/partition.py::param_logical_axes.
+PARAM_AXES = {
+    "wg": ("d_model", "d_ff"),
+    "wu": ("d_model", "d_ff"),
+    "wd": ("d_ff", "d_model"),
+}

@@ -1,0 +1,255 @@
+"""Mamba2 SSD (state-space duality) mixer — chunked train path + recurrent
+decode path.
+
+Chunked SSD (Dao & Gu 2024, §6): the sequence is split into Q-token chunks;
+within a chunk the dual quadratic (attention-like) form runs on the MXU;
+across chunks a tiny (H, P, N) state is carried by a sequential scan of
+length S/Q. This is the TPU-friendly layout: all large einsums are dense and
+lane-aligned, the sequential dependency is S/Q steps (16 for 4k/256), and
+the state fits VMEM.
+
+Decode is the SSM recurrence proper: O(1) per token with a (B, H, P, N)
+state plus a (B, d_conv-1, conv_dim) causal-conv tail — this is what makes
+the 500k decode cell linear-cost.
+
+n_groups == 1 is asserted (both assigned SSM archs use 1 group).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm.layers import truncated_normal_init
+
+Array = Any
+
+__all__ = ["init_mamba2", "mamba2_forward", "mamba2_decode", "SSMSlice",
+           "ssd_chunked", "ssd_reference"]
+
+
+class SSMSlice(NamedTuple):
+    """One layer's SSM decode cache."""
+    state: Array      # (B, H, P, N) f32
+    conv_buf: Array   # (B, d_conv-1, conv_dim)
+
+
+def init_mamba2(key, cfg) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    di, h, n, g = cfg.d_inner, cfg.n_ssm_heads, cfg.d_state, cfg.n_groups
+    assert g == 1, "n_groups==1 assumed (both assigned SSM archs)"
+    proj_out = 2 * di + 2 * g * n + h
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "in_proj": truncated_normal_init(k1, (cfg.d_model, proj_out), 1.0, dt),
+        "conv_w": truncated_normal_init(k2, (cfg.d_conv, cfg.conv_dim), 1.0, dt),
+        "conv_b": jnp.zeros((cfg.conv_dim,), dt),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),      # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((di,), jnp.float32),
+        "out_proj": truncated_normal_init(k3, (di, cfg.d_model), 1.0, dt),
+    }
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv. x: (B, S, C); w: (W, C)."""
+    wdt = x.dtype
+    width, c = w.shape
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w[:, None, :].astype(jnp.float32),           # (W, 1, C)
+        window_strides=(1,), padding=[(width - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=c)
+    return (out + b.astype(jnp.float32)).astype(wdt)
+
+
+# --------------------------------------------------------------------------
+# SSD core
+# --------------------------------------------------------------------------
+
+def ssd_reference(x, dt, a_coef, b_in, c_in, init_state=None):
+    """O(S) sequential oracle. x: (B,S,H,P), dt: (B,S,H), a_coef: (H,)<0,
+    b_in/c_in: (B,S,N). Returns (y, final_state)."""
+    bsz, s, h, p = x.shape
+    n = b_in.shape[-1]
+    st0 = (jnp.zeros((bsz, h, p, n), jnp.float32) if init_state is None
+           else init_state)
+
+    def step(st, inp):
+        xt, dtt, bt, ct = inp          # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt * a_coef)  # (B,H)
+        upd = (dtt[..., None, None] * xt[..., None]
+               * bt[:, None, None, :])                    # (B,H,P,N)
+        st = st * decay[..., None, None] + upd
+        yt = jnp.einsum("bhpn,bn->bhp", st, ct)
+        return st, yt
+
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          b_in.transpose(1, 0, 2).astype(jnp.float32),
+          c_in.transpose(1, 0, 2).astype(jnp.float32))
+    st, ys = jax.lax.scan(step, st0, xs)
+    return ys.transpose(1, 0, 2, 3), st
+
+
+def _segsum(a: Array) -> Array:
+    """a: (..., Q). Returns L with L[..., i, j] = sum_{j<k<=i} a_k (i>=j),
+    -inf above the diagonal."""
+    q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]      # i, j
+    ii = jnp.arange(q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_coef, b_in, c_in, *, chunk: int,
+                init_state=None):
+    """Chunked SSD. Same signature/semantics as ssd_reference."""
+    bsz, s_orig, h, p = x.shape
+    n = b_in.shape[-1]
+    q = min(chunk, s_orig)
+    pad = (-s_orig) % q
+    if pad:  # tail-pad with dt=0 steps: decay=1, update=0 -> state-neutral
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_in = jnp.pad(b_in, ((0, 0), (0, pad), (0, 0)))
+        c_in = jnp.pad(c_in, ((0, 0), (0, pad), (0, 0)))
+    s = s_orig + pad
+    nc = s // q
+
+    xf = x.astype(jnp.float32).reshape(bsz, nc, q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(bsz, nc, q, h)
+    bf = b_in.astype(jnp.float32).reshape(bsz, nc, q, n)
+    cf = c_in.astype(jnp.float32).reshape(bsz, nc, q, n)
+
+    a = dtf * a_coef                                   # (B,NC,Q,H) log-decay
+    a_h = a.transpose(0, 1, 3, 2)                      # (B,NC,H,Q)
+    cum = jnp.cumsum(a_h, axis=-1)                     # (B,NC,H,Q)
+    xdt = xf * dtf[..., None]                          # B·x·dt form
+
+    # --- intra-chunk (dual quadratic form) ---------------------------------
+    ell = jnp.exp(_segsum(a_h))                        # (B,NC,H,Q,Q)
+    scores = jnp.einsum("bcin,bcjn->bcij", cf, bf)     # (B,NC,Q,Q)
+    w = scores[:, :, None] * ell                       # (B,NC,H,i,j)
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", w, xdt)
+
+    # --- chunk summaries ----------------------------------------------------
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)        # (B,NC,H,Q)
+    states = jnp.einsum("bchq,bcqn,bcqhp->bchpn",
+                        decay_to_end, bf, xdt)         # (B,NC,H,P,N)
+
+    # --- inter-chunk recurrence (sequential over NC) ------------------------
+    chunk_decay = jnp.exp(cum[..., -1])                # (B,NC,H)
+    st0 = (jnp.zeros((bsz, h, p, n), jnp.float32) if init_state is None
+           else init_state)
+
+    def step(st, inp):
+        dcy, s_c = inp                                 # (B,H), (B,H,P,N)
+        out = st                                       # state BEFORE chunk
+        st = st * dcy[..., None, None] + s_c
+        return st, out
+
+    final, prev_states = jax.lax.scan(
+        step, st0, (chunk_decay.transpose(1, 0, 2),
+                    states.transpose(1, 0, 2, 3, 4)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,NC,H,P,N)
+
+    # --- inter-chunk contribution -------------------------------------------
+    in_decay = jnp.exp(cum)                             # decay from chunk start
+    y_off = jnp.einsum("bcqn,bchpn,bchq->bcqhp",
+                       cf, prev_states, in_decay)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y[:, :s_orig], final
+
+
+# --------------------------------------------------------------------------
+# Full mixer forward (train/prefill) and decode
+# --------------------------------------------------------------------------
+
+def _split_proj(cfg, zxbcdt):
+    di, n, h = cfg.d_inner, cfg.n_groups * cfg.d_state, cfg.n_ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + cfg.conv_dim]
+    dt = zxbcdt[..., di + cfg.conv_dim:]
+    return z, xbc, dt
+
+
+def _gated_norm(y, z, scale, eps=1e-6):
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    return y * jax.lax.rsqrt(var + eps) * scale
+
+
+def mamba2_forward(cfg, p: dict, u: Array, *, init_state: SSMSlice | None = None,
+                   return_state: bool = False):
+    """u: (B, S, d_model) -> (B, S, d_model) [+ SSMSlice if return_state]."""
+    bsz, s, _ = u.shape
+    di, n, h, pd = cfg.d_inner, cfg.d_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = u @ p["in_proj"]
+    z, xbc, dtp = _split_proj(cfg, zxbcdt)
+    if init_state is not None:
+        pad = jnp.concatenate([init_state.conv_buf.astype(xbc.dtype), xbc], 1)
+        xbc_conv = jax.nn.silu(_causal_conv(pad, p["conv_w"], p["conv_b"])
+                               )[:, -s:]
+    else:
+        xbc_conv = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+    x_in = xbc_conv[..., :di]
+    b_in = xbc_conv[..., di:di + n]
+    c_in = xbc_conv[..., di + n:di + 2 * n]
+
+    dt = jax.nn.softplus(dtp.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    a_coef = -jnp.exp(p["A_log"])                                   # (H,)
+
+    xh = x_in.reshape(bsz, s, h, pd)
+    st0 = init_state.state if init_state is not None else None
+    y, final = ssd_chunked(xh, dt, a_coef, b_in, c_in,
+                           chunk=cfg.ssm_chunk, init_state=st0)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, di)
+    y = _gated_norm(y, z, p["norm_scale"])
+    out = (y.astype(u.dtype) @ p["out_proj"])
+
+    if return_state:
+        tail = max(cfg.d_conv - 1, 0)
+        buf = xbc[:, -tail:] if s >= tail else jnp.pad(
+            xbc, ((0, 0), (tail - s, 0), (0, 0)))
+        return out, SSMSlice(state=final, conv_buf=buf.astype(u.dtype))
+    return out
+
+
+def mamba2_decode(cfg, p: dict, u: Array, cache: SSMSlice
+                  ) -> tuple[Array, SSMSlice]:
+    """One-token recurrent step. u: (B, 1, d_model)."""
+    bsz = u.shape[0]
+    di, n, h, pd = cfg.d_inner, cfg.d_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+
+    zxbcdt = u @ p["in_proj"]
+    z, xbc, dtp = _split_proj(cfg, zxbcdt)               # (B,1,*)
+    window = jnp.concatenate([cache.conv_buf.astype(xbc.dtype), xbc], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    xbc_c = jax.nn.silu(conv_out)[:, None, :]            # (B,1,C)
+    new_buf = window[:, 1:]
+
+    x_in = xbc_c[..., :di].reshape(bsz, h, pd)
+    b_in = xbc_c[..., di:di + n][:, 0]                   # (B,N)
+    c_in = xbc_c[..., di + n:di + 2 * n][:, 0]
+
+    dt = jax.nn.softplus(dtp[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a_coef = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * a_coef)                          # (B,H)
+    upd = dt[..., None, None] * x_in.astype(jnp.float32)[..., None] \
+        * b_in[:, None, None, :].astype(jnp.float32)
+    state = cache.state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, c_in.astype(jnp.float32))
+    y = y + p["D"][None, :, None] * x_in.astype(jnp.float32)
+    y = y.reshape(bsz, 1, di)
+    y = _gated_norm(y, z, p["norm_scale"])
+    out = y.astype(u.dtype) @ p["out_proj"]
+    return out, SSMSlice(state=state, conv_buf=new_buf.astype(u.dtype))

@@ -1,0 +1,186 @@
+"""MoE layer: top-k routing + expert GLU-MLP via the sparse dispatch path.
+
+Two execution paths with identical semantics:
+
+* **Manual EP path** (production, picked when a physical mesh with a 'model'
+  axis is active and shapes divide): tokens are sequence-sharded over
+  'model'; each chip routes its own tokens, scatters them into per-peer send
+  buffers (LOCAL indices — the paper's sparse-dispatch insight keeps this a
+  pure scatter, no one-hot einsum flops), exchanges with its EP group via
+  grouped ``lax.all_to_all``, runs its resident expert's GLU densely, and
+  returns results the same way. Wire cost = routed activations only.
+  The GSPMD alternative could not partition the computed-index gather and
+  replicated a (T, k, D) tensor per chip — the dry-run caught it.
+
+* **Einsum path** (fallback: single device, smoke tests, decode's T=B).
+
+Expert replicas: weights are stored (E·R, D, F) with R = replicas so the
+leading dim exactly matches the model-axis width (mixtral: 8x2 on 16).
+Slice s serves logical expert ``s % E`` in EP group ``s // E``. Replica
+gradients are tied (summed) in the train step.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import dispatch as D
+from repro.dist.sharding import shard_constraint, _current_mesh
+from repro.models.lm.layers import truncated_normal_init
+
+Array = Any
+
+__all__ = ["init_moe", "moe_layer", "tie_expert_replica_grads"]
+
+
+def init_moe(key, cfg) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    e, r, d, f = cfg.n_experts, cfg.n_expert_replicas, cfg.d_model, cfg.d_ff
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+
+    def rep(w):                      # replicate expert slices R times
+        return jnp.concatenate([w] * r, axis=0) if r > 1 else w
+
+    return {
+        "router": truncated_normal_init(k1, (d, e), 1.0, jnp.float32),
+        "wg": rep(truncated_normal_init(k2, (e, d, f), 1.0, dt)),
+        "wu": rep(truncated_normal_init(k3, (e, d, f), 1.0, dt)),
+        "wd": rep(truncated_normal_init(k4, (e, f, d), 1.0, dt)),
+    }
+
+
+def tie_expert_replica_grads(cfg, grads):
+    """Sum gradients across expert replicas so tied copies stay identical.
+    Applies to any leaf under a 'moe' key with a stacked (L, E·R, ...) dim."""
+    r, e = cfg.n_expert_replicas, cfg.n_experts
+    if r <= 1 or not cfg.n_experts:
+        return grads
+
+    def fix(path, g):
+        keys = [getattr(k, "key", "") for k in path]
+        if "moe" in keys and keys[-1] in ("wg", "wu", "wd"):
+            parts = [g[:, i * e:(i + 1) * e] for i in range(r)]
+            tied = sum(parts[1:], parts[0])
+            return jnp.concatenate([tied] * r, axis=1)
+        return g
+
+    return jax.tree_util.tree_map_with_path(fix, grads)
+
+
+# --------------------------------------------------------------------------
+# Fallback einsum path (single-device / decode / smoke)
+# --------------------------------------------------------------------------
+
+def _moe_einsum(cfg, p: dict, x: Array) -> tuple[Array, Array]:
+    b, s, d = x.shape
+    flat = x.reshape(b * s, d)
+    logits = flat.astype(jnp.float32) @ p["router"]
+    r = D.route_topk(logits, cfg.top_k, capacity_factor=cfg.capacity_factor)
+    # replica-major slot remap: consume the stacked (E·R, D, F) weights in
+    # place — never slice a model-sharded dim (forces a weight reshard)
+    r = D.expand_replicas(r, cfg.n_expert_replicas)
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    out = D.moe_mlp(flat, r, p["wg"], p["wu"], p["wd"], act=act,
+                    use_kernel=False)
+    return out.reshape(b, s, d), r.aux_loss
+
+
+# --------------------------------------------------------------------------
+# Manual EP path
+# --------------------------------------------------------------------------
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _moe_manual(cfg, p: dict, x: Array, mesh) -> tuple[Array, Array]:
+    e, r_rep, k = cfg.n_experts, cfg.n_expert_replicas, cfg.top_k
+    m_size = mesh.shape["model"]
+    assert e * r_rep == m_size, (e, r_rep, m_size)
+    b, s, d = x.shape
+    act = jax.nn.silu if cfg.act == "silu" else jax.nn.gelu
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    groups = [[g * e + i for i in range(e)] for g in range(r_rep)]
+    all_axes = tuple(mesh.shape.keys())
+
+    def body(x_blk, router, wg, wu, wd):
+        # x_blk: (B_loc, S_loc, D); wg/wu: (1, D, F); wd: (1, F, D)
+        bl, sl, _ = x_blk.shape
+        tl = bl * sl
+        flat = x_blk.reshape(tl, d)
+        logits = flat.astype(jnp.float32) @ router          # (Tl, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_g, top_i = jax.lax.top_k(probs, k)              # (Tl, k)
+        top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)
+        top_g = top_g.astype(x_blk.dtype)
+
+        cs = max(_round_up(int(tl * k * cfg.capacity_factor / e), 8), 8)
+        peer = top_i.reshape(-1)                            # (Tl*k,) in [0,E)
+        onehot = jax.nn.one_hot(peer, e, dtype=jnp.int32)
+        pos = (jnp.cumsum(onehot, axis=0) - onehot)
+        pos = jnp.sum(pos * onehot, axis=-1)                # slot within peer
+        keep = pos < cs
+        tok = jnp.repeat(jnp.arange(tl), k)
+        peer_c = jnp.where(keep, peer, e - 1)
+        pos_c = jnp.where(keep, pos, cs - 1)
+        vals = jnp.where(keep[:, None], flat[tok], 0)
+        send = jnp.zeros((e, cs, d), x_blk.dtype
+                         ).at[peer_c, pos_c].add(vals)       # LOCAL scatter
+
+        recv = jax.lax.all_to_all(send, "model", 0, 0,
+                                  axis_index_groups=groups)  # (E, Cs, D)
+        h_in = recv.reshape(e * cs, d)
+        g = h_in @ wg[0]
+        u = h_in @ wu[0]
+        y = (act(g) * u) @ wd[0]                             # (E*Cs, D)
+        back = jax.lax.all_to_all(y.reshape(e, cs, d).astype(x_blk.dtype),
+                                  "model", 0, 0,
+                                  axis_index_groups=groups)  # (E, Cs, D)
+
+        picked = back[peer_c, pos_c]                         # (Tl*k, D) local
+        w = jnp.where(keep, top_g.reshape(-1), 0)[:, None].astype(back.dtype)
+        out = jax.ops.segment_sum(picked * w, tok, num_segments=tl)
+
+        # load-balance aux (global stats via psum over every mesh axis)
+        me_loc = probs.sum(axis=0)                           # (E,)
+        ce_loc = onehot.sum(axis=0).astype(jnp.float32)      # (E,)
+        cnt = jnp.asarray(tl, jnp.float32)
+        me, ce, n = (jax.lax.psum(v, all_axes) for v in (me_loc, ce_loc, cnt))
+        aux = e * jnp.sum((me / n) * (ce / (n * k)))
+        return out.reshape(bl, sl, d).astype(x_blk.dtype), aux
+
+    x_spec = P(batch_axes, "model", None)
+    out, aux = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec, P(None, None), P("model", None, None),
+                  P("model", None, None), P("model", None, None)),
+        out_specs=(x_spec, P()),
+    )(x, p["router"], p["wg"], p["wu"], p["wd"])
+    return out, aux
+
+
+def _manual_ok(cfg, x, mesh) -> bool:
+    if mesh is None or "model" not in mesh.shape:
+        return False
+    m = mesh.shape["model"]
+    if cfg.n_experts * cfg.n_expert_replicas != m:
+        return False
+    b, s, _ = x.shape
+    batch = 1
+    for a in ("pod", "data"):
+        if a in mesh.shape:
+            batch *= mesh.shape[a]
+    return s % m == 0 and b % batch == 0
+
+
+def moe_layer(cfg, p: dict, x: Array) -> tuple[Array, Array]:
+    """x: (B, S, D) -> (out, aux_loss)."""
+    mesh = _current_mesh()
+    if cfg.moe_sparse_dispatch and _manual_ok(cfg, x, mesh):
+        return _moe_manual(cfg, p, x, mesh)
+    out, aux = _moe_einsum(cfg, p, x)
+    out = shard_constraint(out, ("batch", "seq", "d_model"))
+    return out, aux

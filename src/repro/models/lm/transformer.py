@@ -1,0 +1,504 @@
+"""Unified config-driven LM: dense / MoE / SSM / hybrid / encoder / VLM.
+
+One scan-over-layers body serves all ten assigned architectures; family
+differences are static config branches (resolved at trace time), per-layer
+differences (sliding-window vs full attention) are *scanned operands* so the
+stack stays homogeneous and compiles as a single rolled loop — the HLO is
+O(1) in depth, which keeps 40-cell dry-run compiles tractable.
+
+Entry points:
+  init_params(cfg, key)                     parameter pytree (stacked layers)
+  loss_fn(cfg, params, batch)               -> (loss, metrics)    [train]
+  prefill(cfg, params, batch, capacity)     -> (cache, logits)    [serve]
+  decode_step(cfg, params, cache, tokens)   -> (logits, cache)    [serve]
+  init_cache(cfg, batch, capacity)          zero cache (concrete or, under
+                                            jax.eval_shape, spec-only)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import FULL_ATTN_WINDOW, ModelConfig
+from repro.dist.sharding import shard_constraint
+from repro.models.lm import mamba2 as M
+from repro.models.lm.attention import KVSlice, chunked_attention, decode_attention
+from repro.models.lm.layers import (dtype_of, glu_mlp, init_glu_mlp,
+                                    init_norm, norm_apply, rope,
+                                    truncated_normal_init)
+from repro.models.lm.moe import init_moe, moe_layer
+
+Array = Any
+
+__all__ = ["Model", "init_params", "init_cache", "loss_fn", "prefill",
+           "decode_step", "forward_hidden"]
+
+
+# ==========================================================================
+# Parameter init
+# ==========================================================================
+
+def _init_attn(key, cfg: ModelConfig) -> dict:
+    dt = dtype_of(cfg)
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {"wq": truncated_normal_init(ks[0], (d, h * dh), 1.0, dt),
+         "wk": truncated_normal_init(ks[1], (d, kv * dh), 1.0, dt),
+         "wv": truncated_normal_init(ks[2], (d, kv * dh), 1.0, dt),
+         "wo": truncated_normal_init(ks[3], (h * dh, d), 1.0, dt)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * dh,), dt)
+        p["bk"] = jnp.zeros((kv * dh,), dt)
+        p["bv"] = jnp.zeros((kv * dh,), dt)
+    return p
+
+
+def _init_layer(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    p = {"ln1": init_norm(cfg)}
+    if cfg.ssm:                       # pure SSD block: mixer only
+        p["mixer"] = M.init_mamba2(ks[0], cfg)
+        return p
+    p["attn"] = _init_attn(ks[0], cfg)
+    if cfg.hybrid:
+        p["ssm"] = M.init_mamba2(ks[1], cfg)
+        dt = dtype_of(cfg)
+        p["mix_attn"] = jnp.ones((cfg.d_model,), dt)   # per-path fusion gains
+        p["mix_ssm"] = jnp.ones((cfg.d_model,), dt)
+    p["ln2"] = init_norm(cfg)
+    if cfg.n_experts:
+        p["moe"] = init_moe(ks[2], cfg)
+    else:
+        p["mlp"] = init_glu_mlp(ks[3], cfg)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dt = dtype_of(cfg)
+    k_emb, k_layers, k_head, k_meta = jax.random.split(key, 4)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_layer(k, cfg))(layer_keys)
+
+    params = {
+        "embed": truncated_normal_init(
+            k_emb, (cfg.vocab_padded, cfg.d_model), 1.0, dt),
+        "out_norm": init_norm(cfg),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = truncated_normal_init(
+            k_head, (cfg.d_model, cfg.vocab_padded), 1.0, dt)
+    if cfg.n_meta_tokens:
+        params["meta"] = truncated_normal_init(
+            k_meta, (cfg.n_meta_tokens, cfg.d_model), 1.0, dt)
+    return params
+
+
+# ==========================================================================
+# Block body (shared by train / prefill / decode)
+# ==========================================================================
+
+def _attn_qkv(cfg, p, x, positions):
+    b, s, _ = x.shape
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"] + (p.get("bq", 0) if cfg.qkv_bias else 0)
+    k = x @ p["wk"] + (p.get("bk", 0) if cfg.qkv_bias else 0)
+    v = x @ p["wv"] + (p.get("bv", 0) if cfg.qkv_bias else 0)
+    q = q.reshape(b, s, h, dh)
+    k = k.reshape(b, s, kv, dh)
+    v = v.reshape(b, s, kv, dh)
+    q = rope(q, positions, cfg.rope_theta).transpose(0, 2, 1, 3)
+    k = rope(k, positions, cfg.rope_theta).transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    q = shard_constraint(q, ("batch", "heads", "seq", None))
+    k = shard_constraint(k, ("batch", "kv_heads", "seq", None))
+    v = shard_constraint(v, ("batch", "kv_heads", "seq", None))
+    return q, k, v
+
+
+def _train_block(cfg: ModelConfig, p: dict, x: Array, positions,
+                 collect_kv: bool, is_global: bool = True):
+    """Full-sequence block. ``is_global`` is STATIC (the layer stack is run
+    as segmented scans over contiguous same-type runs, so no lax.cond —
+    SWA layers truly skip the out-of-band tiles).
+    Returns (x', aux_loss, (k, v) or None)."""
+    b, s, _ = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    aux = jnp.zeros((), jnp.float32)
+    kv_out = None
+
+    if cfg.ssm:
+        x = x + M.mamba2_forward(cfg, p["mixer"], norm_apply(cfg, p["ln1"], x))
+        return x, aux, kv_out
+
+    xn = norm_apply(cfg, p["ln1"], x)
+    q, k, v = _attn_qkv(cfg, p["attn"], xn, positions)
+    use_band = (not is_global and cfg.window is not None
+                and cfg.window < s)      # banded pays off only when w < S
+    if use_band:
+        from repro.models.lm.attention import banded_attention
+        attn = banded_attention(q, k, v, window=cfg.window,
+                                meta_len=cfg.n_meta_tokens)
+    else:
+        win = None if (is_global or cfg.window is None) else cfg.window
+        attn = chunked_attention(q, k, v, causal=cfg.causal, window=win,
+                                 meta_len=cfg.n_meta_tokens)
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, s, h * dh) @ p["attn"]["wo"]
+    if collect_kv:
+        kv_out = (k, v)
+
+    if cfg.hybrid:
+        ssm_out = M.mamba2_forward(cfg, p["ssm"], xn)
+        mixed = 0.5 * (attn * p["mix_attn"] + ssm_out * p["mix_ssm"])
+        x = x + mixed
+    else:
+        x = x + attn
+
+    xn2 = norm_apply(cfg, p["ln2"], x)
+    if cfg.n_experts:
+        mlp_out, aux = moe_layer(cfg, p["moe"], xn2)
+    else:
+        mlp_out = glu_mlp(cfg, p["mlp"], xn2)
+    x = x + mlp_out
+    x = shard_constraint(x, ("batch", "seq", "d_model"))
+    return x, aux, kv_out
+
+
+def _decode_block(cfg: ModelConfig, p: dict, x: Array, window, pos,
+                  slot: Array, kv: KVSlice | None, ssm: M.SSMSlice | None):
+    """One-token block. Returns (x', new_kv, new_ssm)."""
+    b = x.shape[0]
+    h, dh, n_kv = cfg.n_heads, cfg.head_dim, cfg.n_kv_heads
+
+    if cfg.ssm:
+        out, ssm = M.mamba2_decode(cfg, p["mixer"],
+                                   norm_apply(cfg, p["ln1"], x), ssm)
+        return x + out, kv, ssm
+
+    xn = norm_apply(cfg, p["ln1"], x)
+    q, k, v = _attn_qkv(cfg, p["attn"], xn, pos[:, None])
+    # write the new token's K/V into this layer's rolling buffer
+    bidx = jnp.arange(b)
+    new_k = kv.k.at[bidx, :, slot].set(k[:, :, 0])
+    new_v = kv.v.at[bidx, :, slot].set(v[:, :, 0])
+    kv = KVSlice(k=new_k, v=new_v, slot_pos=kv.slot_pos)
+    attn = decode_attention(q, kv, pos, window=window,
+                            meta_len=cfg.n_meta_tokens)
+    attn = attn.reshape(b, 1, h * dh) @ p["attn"]["wo"]
+
+    if cfg.hybrid:
+        ssm_out, ssm = M.mamba2_decode(cfg, p["ssm"], xn, ssm)
+        x = x + 0.5 * (attn * p["mix_attn"] + ssm_out * p["mix_ssm"])
+    else:
+        x = x + attn
+
+    xn2 = norm_apply(cfg, p["ln2"], x)
+    if cfg.n_experts:
+        mlp_out, _ = moe_layer(cfg, p["moe"], xn2)
+    else:
+        mlp_out = glu_mlp(cfg, p["mlp"], xn2)
+    return x + mlp_out, kv, ssm
+
+
+# ==========================================================================
+# Embedding / unembedding
+# ==========================================================================
+
+def _embed_batch(cfg: ModelConfig, params: dict, batch: dict) -> Array:
+    """Assemble the input sequence: [meta? | image-prefix? | tokens/frames]."""
+    if cfg.family == "audio":
+        x = batch["frames"].astype(dtype_of(cfg))      # stub frontend output
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.family == "vlm" and "image_emb" in batch:
+        x = jnp.concatenate([batch["image_emb"].astype(x.dtype), x], axis=1)
+    if cfg.n_meta_tokens:
+        b = x.shape[0]
+        meta = jnp.broadcast_to(params["meta"][None],
+                                (b, cfg.n_meta_tokens, cfg.d_model)
+                                ).astype(x.dtype)
+        x = jnp.concatenate([meta, x], axis=1)
+    return shard_constraint(x, ("batch", "seq", "d_model"))
+
+
+def _unembed(cfg: ModelConfig, params: dict, h: Array) -> Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", h, w)
+    return shard_constraint(logits, ("batch", "seq", "vocab"))
+
+
+# ==========================================================================
+# Train path
+# ==========================================================================
+
+def _layer_segments(cfg: ModelConfig) -> list:
+    """Contiguous runs of (start, stop, is_global) over the layer stack."""
+    glob = set(cfg.global_layers) if cfg.window is not None else set()
+    segs = []
+    for i in range(cfg.n_layers):
+        g = (i in glob) or cfg.window is None
+        if segs and segs[-1][2] == g:
+            segs[-1] = (segs[-1][0], i + 1, g)
+        else:
+            segs.append((i, i + 1, g))
+    return segs
+
+
+def _run_layers(cfg: ModelConfig, params: dict, x: Array, positions,
+                collect_kv: bool):
+    """Segmented scan over the stack. Returns (x, aux_sum, ys_dict)."""
+    def make_body(is_global):
+        def body(carry, lp):
+            x = carry
+            x, aux, kv = _train_block(cfg, lp, x, positions,
+                                      collect_kv=collect_kv,
+                                      is_global=is_global)
+            ys = {"aux": aux}
+            if collect_kv and kv is not None:
+                ys["k"], ys["v"] = kv
+            return x, ys
+        if cfg.remat == "full":
+            return jax.checkpoint(body)
+        if cfg.remat == "dots":
+            return jax.checkpoint(
+                body,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        return body
+
+    all_ys = []
+    for (lo, hi, is_global) in _layer_segments(cfg):
+        seg_params = jax.tree_util.tree_map(lambda t: t[lo:hi],
+                                            params["layers"])
+        x, ys = jax.lax.scan(make_body(is_global), x, seg_params)
+        all_ys.append(ys)
+
+    # scan ys always carry a leading seg-length dim: concatenate to (L, ...)
+    merged = {key: jnp.concatenate([y[key] for y in all_ys], axis=0)
+              for key in all_ys[0]}
+    aux = jnp.sum(merged.pop("aux"))
+    return x, aux, merged
+
+
+def forward_hidden(cfg: ModelConfig, params: dict, batch: dict) -> tuple:
+    """Embeds, runs all layers (segmented scans), final norm."""
+    x = _embed_batch(cfg, params, batch)
+    s = x.shape[1]
+    positions = jnp.arange(s)[None, :]
+    x, aux, _ = _run_layers(cfg, params, x, positions, collect_kv=False)
+    x = norm_apply(cfg, params["out_norm"], x)
+    return x, aux
+
+
+def _chunked_xent(cfg: ModelConfig, params: dict, h: Array, targets: Array,
+                  prefix_len: int) -> Array:
+    """Cross-entropy without materializing full (B, S, V) logits: scan over
+    sequence chunks of cfg.logit_chunk. ``prefix_len`` positions (meta/image)
+    are skipped. Mean-per-token loss."""
+    b, s_total, d = h.shape
+    h = h[:, prefix_len:]
+    s = h.shape[1]
+    t = targets[:, :s]
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    c = min(cfg.logit_chunk, s)
+    n_chunks = s // c
+    rem = s - n_chunks * c
+
+    def piece(hc, tc):
+        logits = jnp.einsum("bsd,dv->bsv", hc, w).astype(jnp.float32)
+        logits = shard_constraint(logits, ("batch", "seq", "vocab"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(
+            logits, tc[..., None].astype(jnp.int32), axis=-1)[..., 0]
+        return jnp.sum(lse - picked)
+
+    hc = h[:, :n_chunks * c].reshape(b, n_chunks, c, d).transpose(1, 0, 2, 3)
+    tc = t[:, :n_chunks * c].reshape(b, n_chunks, c).transpose(1, 0, 2)
+
+    def body(tot, inp):
+        return tot + piece(*inp), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, tc))
+    if rem:
+        tot = tot + piece(h[:, n_chunks * c:], t[:, n_chunks * c:])
+    return tot / (b * s)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict) -> tuple:
+    """-> (scalar loss, metrics dict)."""
+    hidden, aux = forward_hidden(cfg, params, batch)
+    prefix = cfg.n_meta_tokens + (
+        cfg.n_prefix_tokens if cfg.family == "vlm" and "image_emb" in batch
+        else 0)
+    xent = _chunked_xent(cfg, params, hidden, batch["targets"], prefix)
+    loss = xent + cfg.router_aux_weight * aux
+    return loss, {"xent": xent, "aux": aux}
+
+
+# ==========================================================================
+# Serve path: cache init / prefill / decode
+# ==========================================================================
+
+def _slot_for(cfg: ModelConfig, pos: Array, capacity: int) -> Array:
+    """Rolling-buffer slot with meta-token pinning."""
+    m = cfg.n_meta_tokens
+    if capacity >= FULL_ATTN_WINDOW:
+        return pos
+    roll = m + (pos - m) % max(capacity - m, 1)
+    return jnp.where(pos < m, pos, roll).astype(jnp.int32)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, capacity: int) -> dict:
+    """Zero decode cache. Under jax.eval_shape this yields pure specs."""
+    dt = dtype_of(cfg)
+    cache: dict = {"pos": jnp.zeros((batch_size,), jnp.int32)}
+    if cfg.has_attention:
+        l, kv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+        cache["k"] = jnp.zeros((l, batch_size, kv, capacity, dh), dt)
+        cache["v"] = jnp.zeros((l, batch_size, kv, capacity, dh), dt)
+        cache["slot_pos"] = jnp.full((batch_size, capacity), -1, jnp.int32)
+    if cfg.ssm or cfg.hybrid:
+        l, h, pdim, n = (cfg.n_layers, cfg.n_ssm_heads, cfg.ssm_head_dim,
+                         cfg.d_state)
+        cache["ssm_state"] = jnp.zeros((l, batch_size, h, pdim, n),
+                                       jnp.float32)
+        cache["conv_buf"] = jnp.zeros(
+            (l, batch_size, cfg.d_conv - 1, cfg.conv_dim), dt)
+    return cache
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: dict, capacity: int
+            ) -> tuple:
+    """Process a full prompt; return (cache, last-token logits)."""
+    x = _embed_batch(cfg, params, batch)
+    b, s, _ = x.shape
+    assert capacity >= s, "prefill assumes the prompt fits the cache"
+    positions = jnp.arange(s)[None, :]
+    cache = init_cache(cfg, b, capacity)
+
+    x, _, ys = _run_layers(cfg, params, x, positions,
+                           collect_kv=cfg.has_attention)
+    if cfg.has_attention:
+        cache["k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], ys["k"].astype(cache["k"].dtype), 0, axis=3)
+        cache["v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], ys["v"].astype(cache["v"].dtype), 0, axis=3)
+        slots = jnp.broadcast_to(jnp.arange(capacity)[None],
+                                 (b, capacity))
+        cache["slot_pos"] = jnp.where(slots < s, slots, -1).astype(jnp.int32)
+    if cfg.ssm or cfg.hybrid:
+        # replay mixer stacks to collect states (cheap relative to attn)
+        cache = _prefill_ssm_states(cfg, params, batch, cache)
+    cache["pos"] = jnp.full((b,), s, jnp.int32)
+    x = norm_apply(cfg, params["out_norm"], x)
+    logits = _unembed(cfg, params, x[:, -1:])
+    return cache, logits
+
+
+def _prefill_ssm_states(cfg, params, batch, cache):
+    """Second pass collecting per-layer SSM final states (hybrid/ssm only).
+
+    Implementation note: runs the same scan but asks the mixer for states;
+    attention results are recomputed — acceptable because prefill for the
+    SSM families is dominated by the mixers themselves."""
+    x = _embed_batch(cfg, params, batch)
+    s = x.shape[1]
+    positions = jnp.arange(s)[None, :]
+
+    states, bufs = [], []
+    for (lo, hi, is_global) in _layer_segments(cfg):
+        seg_params = jax.tree_util.tree_map(lambda t: t[lo:hi],
+                                            params["layers"])
+
+        def body(carry, lp):
+            x = carry
+            key = "mixer" if cfg.ssm else "ssm"
+            xn = norm_apply(cfg, lp["ln1"], x)
+            _, slice_ = M.mamba2_forward(cfg, lp[key], xn, return_state=True)
+            x, _, _ = _train_block(cfg, lp, x, positions, collect_kv=False,
+                                   is_global=is_global)
+            return x, slice_
+
+        x, slices = jax.lax.scan(body, x, seg_params)
+        states.append(slices.state)
+        bufs.append(slices.conv_buf)
+
+    cache["ssm_state"] = jnp.concatenate(states, axis=0)
+    cache["conv_buf"] = jnp.concatenate(bufs, axis=0)
+    return cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict, tokens: Array
+                ) -> tuple:
+    """One decode step. tokens: (B, 1) int32. Returns (logits, new cache)."""
+    b = tokens.shape[0]
+    pos = cache["pos"]                                  # (B,)
+    x = jnp.take(params["embed"], tokens, axis=0)       # (B, 1, D)
+    x = shard_constraint(x, ("batch", None, "d_model"))
+    windows = jnp.asarray(cfg.layer_windows(FULL_ATTN_WINDOW))
+
+    capacity = cache["k"].shape[3] if cfg.has_attention else 0
+    slot = _slot_for(cfg, pos, capacity) if capacity else None
+    slot_pos = None
+    if cfg.has_attention:   # register the incoming token BEFORE attention
+        slot_pos = cache["slot_pos"].at[jnp.arange(b), slot].set(pos)
+
+    def body(carry, inputs):
+        x = carry
+        lp = inputs["lp"]
+        win = inputs["win"]
+        kv = KVSlice(inputs["k"], inputs["v"], slot_pos) \
+            if cfg.has_attention else None
+        ssm = M.SSMSlice(inputs["ssm_state"], inputs["conv_buf"]) \
+            if (cfg.ssm or cfg.hybrid) else None
+        x, kv, ssm = _decode_block(cfg, lp, x, win, pos, slot, kv, ssm)
+        ys = {}
+        if kv is not None:
+            ys["k"], ys["v"] = kv.k, kv.v
+        if ssm is not None:
+            ys["ssm_state"], ys["conv_buf"] = ssm.state, ssm.conv_buf
+        return x, ys
+
+    inputs = {"lp": params["layers"], "win": windows}
+    if cfg.has_attention:
+        inputs["k"], inputs["v"] = cache["k"], cache["v"]
+    if cfg.ssm or cfg.hybrid:
+        inputs["ssm_state"] = cache["ssm_state"]
+        inputs["conv_buf"] = cache["conv_buf"]
+
+    x, ys = jax.lax.scan(body, x, inputs)
+
+    new_cache = dict(cache)
+    if cfg.has_attention:
+        new_cache["k"], new_cache["v"] = ys["k"], ys["v"]
+        new_cache["slot_pos"] = slot_pos
+    if cfg.ssm or cfg.hybrid:
+        new_cache["ssm_state"] = ys["ssm_state"]
+        new_cache["conv_buf"] = ys["conv_buf"]
+    new_cache["pos"] = pos + 1
+
+    x = norm_apply(cfg, params["out_norm"], x)
+    logits = _unembed(cfg, params, x)
+    return logits, new_cache
+
+
+class Model:
+    """Thin OO facade over the functional API (examples/serve use this)."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, key):
+        return init_params(self.cfg, key)
+
+    def loss(self, params, batch):
+        return loss_fn(self.cfg, params, batch)
+
+    def prefill(self, params, batch, capacity: int):
+        return prefill(self.cfg, params, batch, capacity)
+
+    def decode(self, params, cache, tokens):
+        return decode_step(self.cfg, params, cache, tokens)

@@ -1,0 +1,13 @@
+from repro.optim.optimizer import (Optimizer, adamw, sgd, clip_by_global_norm,
+                                   apply_updates, global_norm)
+from repro.optim.schedules import (constant, cosine_decay, linear_warmup,
+                                   warmup_cosine)
+from repro.optim.compression import (int8_compress, int8_decompress,
+                                     ErrorFeedbackState, ef_init, ef_compress_update)
+
+__all__ = [
+    "Optimizer", "adamw", "sgd", "clip_by_global_norm", "apply_updates",
+    "global_norm", "constant", "cosine_decay", "linear_warmup",
+    "warmup_cosine", "int8_compress", "int8_decompress",
+    "ErrorFeedbackState", "ef_init", "ef_compress_update",
+]

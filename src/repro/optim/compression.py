@@ -1,0 +1,65 @@
+"""Gradient compression for cross-pod all-reduce: int8 quantization with
+error feedback (EF-SGD style).
+
+At 512+ chips the pod-axis gradient all-reduce crosses the (slow) inter-pod
+links; int8 with per-tensor scale cuts those bytes 4x vs fp32 / 2x vs bf16.
+Error feedback accumulates the quantization residual locally and re-injects
+it next step, preserving convergence (Karimireddy et al., 2019).
+
+Usage (see train/lm.py): compress -> all-reduce int8 (as int32 sum) ->
+decompress -> optimizer. The dry-run lowers this path when
+``config.grad_compression=True`` so the collective-bytes reduction shows up
+in the roofline table.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = Any
+
+__all__ = ["int8_compress", "int8_decompress", "ErrorFeedbackState",
+           "ef_init", "ef_compress_update"]
+
+
+def int8_compress(x: Array) -> tuple[Array, Array]:
+    """Symmetric per-tensor int8: returns (q, scale). scale is f32 scalar."""
+    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: Array, scale: Array, dtype=jnp.float32) -> Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: Any   # same tree as grads
+
+
+def ef_init(grads_like) -> ErrorFeedbackState:
+    return ErrorFeedbackState(
+        residual=jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def ef_compress_update(grads, ef: ErrorFeedbackState):
+    """Returns (quantized tree of (q, scale), new EF state). The caller
+    all-reduces q (upcast to int32 for the sum) and divides by the replica
+    count after decompress."""
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q, s = int8_compress(corrected)
+        deq = int8_decompress(q, s)
+        return (q, s), corrected - deq
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = tdef.flatten_up_to(ef.residual)
+    pairs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    qtree = tdef.unflatten([p[0] for p in pairs])
+    new_res = tdef.unflatten([p[1] for p in pairs])
+    return qtree, ErrorFeedbackState(residual=new_res)

@@ -1,0 +1,132 @@
+"""Optimizers (pure-JAX, optax-style API but self-contained).
+
+``Optimizer`` bundles init/update; states are pytrees so they shard, donate,
+and checkpoint exactly like params. AdamW keeps moments in the params' dtype
+by default but supports ``state_dtype=jnp.float32`` master-state for bf16
+params (the large-model configuration).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = Any
+Schedule = Callable[[Array], Array]
+
+__all__ = ["Optimizer", "adamw", "sgd", "clip_by_global_norm",
+           "apply_updates", "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]   # (grads, state, params)
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    mu: Any
+    nu: Any
+
+
+def _as_schedule(lr) -> Schedule:
+    return lr if callable(lr) else (lambda step: jnp.asarray(lr, jnp.float32))
+
+
+def global_norm(tree) -> Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-12))
+    return jax.tree_util.tree_map(lambda x: (x * scale).astype(x.dtype), tree), n
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def adamw(lr, *, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0, state_dtype=None,
+          clip_norm: float | None = None) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        def z(p):
+            dt = state_dtype or p.dtype
+            return jnp.zeros(p.shape, dt)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree_util.tree_map(z, params),
+                          nu=jax.tree_util.tree_map(z, params))
+
+    def update(grads, state: AdamWState, params):
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        lr_t = sched(step)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            gf = g.astype(m.dtype)
+            m2 = b1 * m + (1 - b1) * gf
+            v2 = b2 * v + (1 - b2) * jnp.square(gf)
+            mhat = m2 / c1
+            vhat = v2 / c2
+            u = -lr_t * (mhat / (jnp.sqrt(vhat) + eps)
+                         + weight_decay * p.astype(m.dtype))
+            return u, m2, v2
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_m = tdef.flatten_up_to(state.mu)
+        flat_v = tdef.flatten_up_to(state.nu)
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p
+               in zip(flat_g, flat_m, flat_v, flat_p)]
+        updates = tdef.unflatten([o[0] for o in out])
+        mu = tdef.unflatten([o[1] for o in out])
+        nu = tdef.unflatten([o[2] for o in out])
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init=init, update=update)
+
+
+class SGDState(NamedTuple):
+    step: Array
+    momentum: Any
+
+
+def sgd(lr, *, momentum: float = 0.0, nesterov: bool = False,
+        clip_norm: float | None = None) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        mom = jax.tree_util.tree_map(jnp.zeros_like, params) \
+            if momentum else None
+        return SGDState(step=jnp.zeros((), jnp.int32), momentum=mom)
+
+    def update(grads, state: SGDState, params):
+        del params
+        if clip_norm is not None:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state.step + 1
+        lr_t = sched(step)
+        if momentum:
+            mom = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g, state.momentum, grads)
+            eff = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g, mom, grads) if nesterov else mom
+            updates = jax.tree_util.tree_map(lambda e: -lr_t * e, eff)
+            return updates, SGDState(step=step, momentum=mom)
+        updates = jax.tree_util.tree_map(lambda g: -lr_t * g, grads)
+        return updates, SGDState(step=step, momentum=None)
+
+    return Optimizer(init=init, update=update)

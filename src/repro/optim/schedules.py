@@ -1,0 +1,33 @@
+"""Learning-rate schedules (step -> lr, jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def f(step):
+        s = step.astype(jnp.float32)
+        return lr * jnp.minimum(1.0, (s + 1) / max(warmup_steps, 1))
+    return f
+
+
+def cosine_decay(lr: float, decay_steps: int, alpha: float = 0.0):
+    def f(step):
+        s = jnp.minimum(step.astype(jnp.float32), decay_steps)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * s / max(decay_steps, 1)))
+        return lr * ((1 - alpha) * cos + alpha)
+    return f
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                  alpha: float = 0.1):
+    decay = cosine_decay(lr, max(total_steps - warmup_steps, 1), alpha)
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = lr * (s + 1) / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, decay(step - warmup_steps))
+    return f

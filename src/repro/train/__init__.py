@@ -1,0 +1,3 @@
+from repro.train.gnn import train_gnn, GNNTrainResult
+
+__all__ = ["train_gnn", "GNNTrainResult"]

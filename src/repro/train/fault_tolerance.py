@@ -1,0 +1,131 @@
+"""Fault tolerance: resilient step loop, straggler watchdog, elastic restart.
+
+Designed for the 1000+-node regime, degenerating gracefully to one host:
+
+* **ResilientLoop** — wraps the jitted step: on a step-level exception it
+  writes an emergency checkpoint from the last known-good state, optionally
+  rebuilds the step (fresh compile after a device reset), and resumes from
+  the last durable step. Retries are bounded; repeated failure re-raises.
+* **StragglerWatchdog** — EMA of step wall-clock; a step slower than
+  ``threshold x`` EMA is flagged; ``on_straggler`` gets the event (at scale
+  the launcher responds by draining the slow host and re-forming the mesh —
+  here we record + surface). Consecutive-flag escalation triggers the
+  elastic path.
+* **elastic restart** — the dry-run proves both the 512-chip and 256-chip
+  meshes compile; on pod loss the launcher restores the latest checkpoint
+  with the degraded mesh's shardings (ckpt.restore(shardings=...)) and
+  continues — see launch/train.py --mesh degraded and
+  tests/test_fault_tolerance.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.ckpt import Checkpointer
+
+__all__ = ["StragglerWatchdog", "ResilientLoop", "StepEvent"]
+
+
+@dataclasses.dataclass
+class StepEvent:
+    step: int
+    wall_s: float
+    ema_s: float
+    straggler: bool
+
+
+class StragglerWatchdog:
+    def __init__(self, *, alpha: float = 0.1, threshold: float = 2.0,
+                 escalate_after: int = 3,
+                 on_straggler: Optional[Callable[[StepEvent], None]] = None):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.escalate_after = escalate_after
+        self.on_straggler = on_straggler
+        self.ema: Optional[float] = None
+        self.consecutive = 0
+        self.events: list[StepEvent] = []
+
+    def observe(self, step: int, wall_s: float) -> StepEvent:
+        if self.ema is None:
+            self.ema = wall_s
+        flagged = wall_s > self.threshold * self.ema
+        # EMA updated with clipped sample so one outlier doesn't poison it
+        sample = min(wall_s, 4.0 * self.ema)
+        self.ema = (1 - self.alpha) * self.ema + self.alpha * sample
+        self.consecutive = self.consecutive + 1 if flagged else 0
+        ev = StepEvent(step=step, wall_s=wall_s, ema_s=self.ema,
+                       straggler=flagged)
+        self.events.append(ev)
+        if flagged and self.on_straggler:
+            self.on_straggler(ev)
+        return ev
+
+    @property
+    def should_escalate(self) -> bool:
+        return self.consecutive >= self.escalate_after
+
+
+class ResilientLoop:
+    """Checkpointed step loop with bounded retry-from-durable-state."""
+
+    def __init__(self, step_fn: Callable, ckpt: Checkpointer, *,
+                 ckpt_every: int = 100, max_restarts: int = 3,
+                 watchdog: Optional[StragglerWatchdog] = None,
+                 rebuild_step: Optional[Callable[[], Callable]] = None,
+                 state_shardings: Any = None):
+        self.step_fn = step_fn
+        self.ckpt = ckpt
+        self.ckpt_every = ckpt_every
+        self.max_restarts = max_restarts
+        self.watchdog = watchdog or StragglerWatchdog()
+        self.rebuild_step = rebuild_step
+        self.state_shardings = state_shardings
+        self.restarts = 0
+        self.emergency_saves = 0
+
+    def run(self, state: Any, batches, *, start_step: int = 0,
+            num_steps: int = 100, on_metrics: Optional[Callable] = None):
+        """Iterate ``batches`` for ``num_steps``; returns (state, last_step)."""
+        step = start_step
+        it = iter(batches)
+        last_good = state
+        while step < start_step + num_steps:
+            batch = next(it)
+            t0 = time.perf_counter()
+            try:
+                state, metrics = self.step_fn(state, batch)
+                jax.block_until_ready(
+                    jax.tree_util.tree_leaves(metrics)[0])
+            except Exception:
+                self.emergency_saves += 1
+                self.ckpt.save(step, last_good, blocking=True,
+                               extra={"emergency": True})
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                if self.rebuild_step is not None:
+                    self.step_fn = self.rebuild_step()
+                state, step = self.ckpt.restore(
+                    last_good, shardings=self.state_shardings)
+                state, step = state, self._manifest_step()
+                continue
+            wall = time.perf_counter() - t0
+            self.watchdog.observe(step, wall)
+            if on_metrics:
+                on_metrics(step, metrics)
+            step += 1
+            last_good = state
+            if step % self.ckpt_every == 0:
+                self.ckpt.save(step, state)
+        self.ckpt.wait()
+        return state, step
+
+    def _manifest_step(self) -> int:
+        from repro.ckpt import latest_step
+        s = latest_step(self.ckpt.base)
+        return s if s is not None else 0

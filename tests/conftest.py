@@ -1,0 +1,34 @@
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here on purpose — tests run on the 1-device CPU default;
+# multi-device behaviour is tested via subprocesses (test_multidevice.py).
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)
+
+
+def random_coo(rng, n, m, nnz, dtype=np.float32, pad_to=None):
+    """Unique-edge random COO + its dense counterpart."""
+    from repro.core import coo_from_edges
+
+    lin = rng.choice(n * m, size=min(nnz, n * m), replace=False)
+    dst, src = lin // m, lin % m
+    val = rng.standard_normal(len(lin)).astype(dtype)
+    coo = coo_from_edges(src, dst, val, n, m, pad_to=pad_to)
+    dense = np.zeros((n, m), dtype)
+    dense[dst, src] = val
+    return coo, dense
+
+
+@pytest.fixture
+def small_graph(rng):
+    return random_coo(rng, 64, 48, 500)
+
+
+@pytest.fixture(scope="session")
+def tiny_dataset():
+    from repro.data import make_dataset
+    return make_dataset("reddit", scale=1 / 512, seed=1)

@@ -1,0 +1,114 @@
+"""Checkpointing (atomic/async/GC/restore) and fault tolerance (watchdog,
+resilient loop recovery, elastic reshard path)."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import (Checkpointer, latest_step, restore_checkpoint,
+                        save_checkpoint)
+from repro.train.fault_tolerance import ResilientLoop, StragglerWatchdog
+
+
+def _tree(x=0.0):
+    return {"w": jnp.full((4, 3), x), "opt": {"mu": jnp.full((4, 3), x + 1),
+                                              "step": jnp.asarray(7)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree(2.5)
+    save_checkpoint(str(tmp_path), 5, t)
+    got, step = restore_checkpoint(str(tmp_path), _tree())
+    assert step == 5
+    np.testing.assert_allclose(np.asarray(got["w"]), np.asarray(t["w"]))
+    np.testing.assert_allclose(np.asarray(got["opt"]["mu"]),
+                               np.asarray(t["opt"]["mu"]))
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree(1.0))
+    # simulate a crash mid-save at step 2: dir exists, no _COMMITTED
+    d = os.path.join(str(tmp_path), "step_000000002")
+    os.makedirs(d)
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        f.write("{}")
+    assert latest_step(str(tmp_path)) == 1
+    got, step = restore_checkpoint(str(tmp_path), _tree())
+    assert step == 1
+
+
+def test_keep_n_gc_and_async(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree(float(s)))
+    ck.wait()
+    assert latest_step(str(tmp_path)) == 4
+    kept = sorted(d for d in os.listdir(str(tmp_path))
+                  if d.startswith("step_"))
+    assert len(kept) == 2
+    got, step = ck.restore(_tree())
+    assert step == 4
+    np.testing.assert_allclose(np.asarray(got["w"]), 4.0)
+
+
+def test_restore_with_shardings(tmp_path):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",))
+    t = _tree(3.0)
+    save_checkpoint(str(tmp_path), 1, t)
+    sh = jax.tree_util.tree_map(
+        lambda x: NamedSharding(mesh, P()), t)
+    got, _ = restore_checkpoint(str(tmp_path), _tree(), shardings=sh)
+    assert got["w"].sharding == NamedSharding(mesh, P())
+
+
+def test_watchdog_flags_and_escalates():
+    wd = StragglerWatchdog(alpha=0.5, threshold=2.0, escalate_after=2)
+    for i in range(5):
+        ev = wd.observe(i, 1.0)
+        assert not ev.straggler
+    assert wd.observe(5, 10.0).straggler
+    assert not wd.should_escalate
+    wd.observe(6, 10.0)
+    assert wd.should_escalate or wd.consecutive >= 1
+
+
+def test_resilient_loop_recovers(tmp_path):
+    calls = {"n": 0}
+
+    def step(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 3:           # one transient failure
+            raise RuntimeError("simulated device loss")
+        return state + batch, {"loss": state}
+
+    ck = Checkpointer(str(tmp_path), keep=3)
+    loop = ResilientLoop(step, ck, ckpt_every=2, max_restarts=2)
+
+    def batches():
+        while True:
+            yield jnp.asarray(1.0)
+
+    state, end = loop.run(jnp.asarray(0.0), batches(), num_steps=6)
+    assert loop.restarts == 1
+    assert loop.emergency_saves == 1
+    assert end >= 6
+    assert float(state) > 0
+
+
+def test_resilient_loop_gives_up(tmp_path):
+    def step(state, batch):
+        raise RuntimeError("permanent failure")
+
+    ck = Checkpointer(str(tmp_path), keep=1)
+    loop = ResilientLoop(step, ck, ckpt_every=10, max_restarts=1)
+
+    def batches():
+        while True:
+            yield jnp.asarray(1.0)
+
+    with pytest.raises(RuntimeError, match="permanent"):
+        loop.run(jnp.asarray(0.0), batches(), num_steps=3)

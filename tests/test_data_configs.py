@@ -1,0 +1,107 @@
+"""Data registry (Table 1 mirror), token stream, and the 10 assigned
+architecture configs (exact published numbers)."""
+import numpy as np
+import pytest
+
+from repro.configs import arch_names, get_config, get_smoke_config
+from repro.configs.base import LM_SHAPES, shape_cells_for
+from repro.data import DATASETS, dataset_names, make_dataset, rmat_edges
+from repro.data.tokens import synthetic_lm_batch
+
+
+def test_table1_registry():
+    assert set(dataset_names()) == {"reddit", "reddit2", "ogbn-mag",
+                                    "amazon", "ogbn-products",
+                                    "ogbn-proteins"}
+    assert DATASETS["reddit"].feat == 602
+    assert DATASETS["reddit"].classes == 41
+    assert DATASETS["ogbn-products"].nodes == 2_449_029
+    assert DATASETS["ogbn-proteins"].feat == 8
+
+
+def test_rmat_determinism_and_skew():
+    s1, d1 = rmat_edges(1024, 8000, seed=3)
+    s2, d2 = rmat_edges(1024, 8000, seed=3)
+    np.testing.assert_array_equal(s1, s2)
+    np.testing.assert_array_equal(d1, d2)
+    deg = np.bincount(d1, minlength=1024)
+    # power-law-ish: max degree far above mean
+    assert deg.max() > 5 * deg.mean()
+
+
+def test_make_dataset_shapes():
+    ds = make_dataset("ogbn-proteins", scale=1 / 64, seed=0)
+    assert ds.x.shape[1] == 8
+    assert ds.num_classes == 112
+    m = np.asarray(ds.train_mask) | np.asarray(ds.val_mask) \
+        | np.asarray(ds.test_mask)
+    assert m.all()
+    assert not (np.asarray(ds.train_mask) & np.asarray(ds.test_mask)).any()
+
+
+def test_token_stream_determinism():
+    a1, b1 = synthetic_lm_batch(4, 16, 100, step=3)
+    a2, b2 = synthetic_lm_batch(4, 16, 100, step=3)
+    np.testing.assert_array_equal(a1, a2)
+    np.testing.assert_array_equal(b1[:, :-1], a1[:, 1:])   # shifted targets
+
+
+# ---- assigned architecture numbers (from the task card) -------------------
+
+EXPECTED = {
+    "hymba-1.5b":           dict(n_layers=32, d_model=1600, n_heads=25,
+                                 n_kv_heads=5, d_ff=5504, vocab=32001,
+                                 d_state=16, hybrid=True, n_meta_tokens=128),
+    "mamba2-1.3b":          dict(n_layers=48, d_model=2048, d_ff=0,
+                                 vocab=50280, d_state=128, ssm=True),
+    "hubert-xlarge":        dict(n_layers=48, d_model=1280, n_heads=16,
+                                 n_kv_heads=16, d_ff=5120, vocab=504,
+                                 causal=False),
+    "phi3.5-moe-42b-a6.6b": dict(n_layers=32, d_model=4096, n_heads=32,
+                                 n_kv_heads=8, d_ff=6400, vocab=32064,
+                                 n_experts=16, top_k=2),
+    "mixtral-8x7b":         dict(n_layers=32, d_model=4096, n_heads=32,
+                                 n_kv_heads=8, d_ff=14336, vocab=32000,
+                                 n_experts=8, top_k=2, window=4096),
+    "llama3-8b":            dict(n_layers=32, d_model=4096, n_heads=32,
+                                 n_kv_heads=8, d_ff=14336, vocab=128256),
+    "qwen1.5-4b":           dict(n_layers=40, d_model=2560, n_heads=20,
+                                 n_kv_heads=20, d_ff=6912, vocab=151936,
+                                 qkv_bias=True),
+    "qwen2-1.5b":           dict(n_layers=28, d_model=1536, n_heads=12,
+                                 n_kv_heads=2, d_ff=8960, vocab=151936,
+                                 qkv_bias=True),
+    "gemma-7b":             dict(n_layers=28, d_model=3072, n_heads=16,
+                                 n_kv_heads=16, d_ff=24576, vocab=256000,
+                                 d_head=256, act="gelu"),
+    "internvl2-2b":         dict(n_layers=24, d_model=2048, n_heads=16,
+                                 n_kv_heads=8, d_ff=8192, vocab=92553,
+                                 n_prefix_tokens=1024),
+}
+
+
+@pytest.mark.parametrize("arch", arch_names())
+def test_assigned_config_numbers(arch):
+    cfg = get_config(arch)
+    for k, v in EXPECTED[arch].items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+@pytest.mark.parametrize("arch", arch_names())
+def test_smoke_config_is_reduced(arch):
+    full, smoke = get_config(arch), get_smoke_config(arch)
+    assert smoke.n_layers <= 4
+    assert smoke.d_model <= 256
+    assert smoke.vocab <= 1024
+    assert smoke.family == full.family
+
+
+def test_shape_cell_skip_rules():
+    assert [c.name for c in shape_cells_for(get_config("hubert-xlarge"))] \
+        == ["train_4k", "prefill_32k"]
+    assert "long_500k" in [c.name for c in
+                           shape_cells_for(get_config("mamba2-1.3b"))]
+    assert "long_500k" not in [c.name for c in
+                               shape_cells_for(get_config("llama3-8b"))]
+    assert LM_SHAPES["train_4k"].global_batch == 256
+    assert LM_SHAPES["long_500k"].seq_len == 524_288

@@ -1,0 +1,132 @@
+"""MoE dispatch as semiring SpMM (the paper's technique on the LM side):
+routing invariants, dispatch/combine == dense one-hot einsum == literal
+sparse matmul, replica grad tying."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import repro.core as C
+from repro.core import dispatch as D
+
+
+def _route(rng, t=64, e=8, k=2, cap=4.0):
+    logits = jnp.asarray(rng.standard_normal((t, e)).astype(np.float32))
+    return D.route_topk(logits, k, capacity_factor=cap), logits
+
+
+def test_route_invariants(rng):
+    r, _ = _route(rng)
+    gates = np.asarray(r.gates)
+    np.testing.assert_allclose(gates.sum(-1), 1.0, rtol=1e-5)
+    assert (np.asarray(r.pos) >= 0).all()
+    assert r.capacity % 128 == 0
+    assert np.isfinite(float(r.aux_loss))
+
+
+def test_dispatch_combine_vs_dense_onehot(rng):
+    t, e, k, d = 64, 8, 2, 16
+    r, logits = _route(rng, t, e, k)
+    x = jnp.asarray(rng.standard_normal((t, d)).astype(np.float32))
+    buf = D.dispatch(x, r)
+    # dense one-hot dispatch matrix P: (E*C, T)
+    pm = np.zeros((e * r.capacity, t), np.float32)
+    ei, pi, kp = (np.asarray(r.expert_idx), np.asarray(r.pos),
+                  np.asarray(r.keep))
+    for ti in range(t):
+        for kk in range(k):
+            if kp[ti, kk]:
+                pm[ei[ti, kk] * r.capacity + pi[ti, kk], ti] = 1.0
+    exp = (pm @ np.asarray(x)).reshape(e, r.capacity, d)
+    np.testing.assert_allclose(np.asarray(buf), exp, rtol=1e-5, atol=1e-5)
+
+    y = jnp.asarray(rng.standard_normal(buf.shape).astype(np.float32))
+    out = D.combine(y, r)
+    gt = np.asarray(r.gates)
+    ptg = np.zeros((t, e * r.capacity), np.float32)
+    for ti in range(t):
+        for kk in range(k):
+            if kp[ti, kk]:
+                ptg[ti, ei[ti, kk] * r.capacity + pi[ti, kk]] = gt[ti, kk]
+    exp2 = ptg @ np.asarray(y).reshape(-1, d)
+    np.testing.assert_allclose(np.asarray(out), exp2, rtol=1e-4, atol=1e-5)
+
+
+def test_dispatch_is_literal_spmm(rng):
+    """as_coo_matrices: dispatch == core.matmul(P, X) — the paper's op."""
+    t, d = 48, 12
+    r, _ = _route(rng, t, 4, 2)
+    x = jnp.asarray(rng.standard_normal((t, d)).astype(np.float32))
+    p_coo, pt_coo = D.as_coo_matrices(r, t)
+    buf_spmm = C.matmul(p_coo, x, reduce="sum")
+    buf = D.dispatch(x, r).reshape(-1, d)
+    np.testing.assert_allclose(np.asarray(buf_spmm), np.asarray(buf),
+                               rtol=1e-5, atol=1e-5)
+    y = jnp.asarray(rng.standard_normal(buf.shape).astype(np.float32))
+    out_spmm = C.matmul(pt_coo, y, reduce="sum")
+    out = D.combine(y.reshape(r.num_experts, r.capacity, d), r)
+    np.testing.assert_allclose(np.asarray(out_spmm), np.asarray(out),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_moe_mlp_matches_explicit_loop(rng):
+    t, e, k, d, f = 32, 4, 2, 8, 16
+    r, logits = _route(rng, t, e, k, cap=8.0)   # ample capacity: no drops
+    x = jnp.asarray(rng.standard_normal((t, d)).astype(np.float32))
+    wg = jnp.asarray(rng.standard_normal((e, d, f)).astype(np.float32))
+    wu = jnp.asarray(rng.standard_normal((e, d, f)).astype(np.float32))
+    wd = jnp.asarray(rng.standard_normal((e, f, d)).astype(np.float32))
+    out = D.moe_mlp(x, r, wg, wu, wd)
+
+    def expert(ei, xi):
+        return (jax.nn.silu(xi @ wg[ei]) * (xi @ wu[ei])) @ wd[ei]
+
+    exp = np.zeros((t, d), np.float32)
+    for ti in range(t):
+        for kk in range(k):
+            ei = int(r.expert_idx[ti, kk])
+            exp[ti] += float(r.gates[ti, kk]) * np.asarray(
+                expert(ei, x[ti]))
+    np.testing.assert_allclose(np.asarray(out), exp, rtol=1e-3, atol=1e-3)
+
+
+def test_tie_expert_replica_grads():
+    from repro.configs import get_smoke_config
+    from repro.models.lm.moe import tie_expert_replica_grads
+    cfg = dataclasses.replace(get_smoke_config("mixtral-8x7b"),
+                              n_expert_replicas=2)
+    e = cfg.n_experts
+    g = {"layers": {"moe": {"wg": jnp.arange(2 * 2 * e * 3 * 4,
+                                             dtype=jnp.float32
+                                             ).reshape(2, 2 * e, 3, 4),
+                            "router": jnp.ones((2, 3, e))}}}
+    tied = tie_expert_replica_grads(cfg, g)
+    wg = np.asarray(tied["layers"]["moe"]["wg"])
+    raw = np.asarray(g["layers"]["moe"]["wg"])
+    np.testing.assert_allclose(wg[:, :e], raw[:, :e] + raw[:, e:])
+    np.testing.assert_allclose(wg[:, :e], wg[:, e:])
+    np.testing.assert_allclose(np.asarray(tied["layers"]["moe"]["router"]),
+                               np.asarray(g["layers"]["moe"]["router"]))
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 999), e=st.sampled_from([2, 4, 8]),
+       k=st.sampled_from([1, 2]))
+def test_route_capacity_property(seed, e, k):
+    rng = np.random.default_rng(seed)
+    t = int(rng.integers(8, 100))
+    logits = jnp.asarray(rng.standard_normal((t, e)).astype(np.float32))
+    r = D.route_topk(logits, k, capacity_factor=1.0)
+    pos, keep = np.asarray(r.pos), np.asarray(r.keep)
+    # every kept slot is unique per expert
+    ei = np.asarray(r.expert_idx)
+    seen = set()
+    for ti in range(t):
+        for kk in range(k):
+            if keep[ti, kk]:
+                key = (int(ei[ti, kk]), int(pos[ti, kk]))
+                assert key not in seen
+                seen.add(key)
+                assert pos[ti, kk] < r.capacity

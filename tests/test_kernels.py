@@ -1,0 +1,120 @@
+"""Pallas kernel sweeps (interpret mode) against the pure-jnp oracles:
+shapes x dtypes per kernel, per the deliverable."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.kernels import ops as kops
+from repro.kernels.ref import (bsr_spmm_ref, fusedmm_softmax_ref,
+                               sddmm_bsr_ref, spmm_ell_ref,
+                               flash_attention_ref)
+from conftest import random_coo
+
+
+@pytest.mark.parametrize("br,bc,fk", [(8, 128, 128), (16, 128, 256),
+                                      (32, 256, 128)])
+@pytest.mark.parametrize("k", [64, 128, 200])
+def test_bsr_spmm_sweep(rng, br, bc, fk, k):
+    coo, dense = random_coo(rng, 150, 140, 1200)
+    bsr = C.bsr_from_coo(coo, br=br, bc=bc)
+    h = jnp.asarray(rng.standard_normal((bsr.ncols, k)).astype(np.float32))
+    out = kops.bsr_spmm(bsr, h, fk=fk, interpret=True)
+    ref = bsr_spmm_ref(bsr, h)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bsr_spmm_dtypes(rng, dtype):
+    coo, dense = random_coo(rng, 80, 80, 600)
+    bsr = C.bsr_from_coo(coo, br=8, bc=128)
+    h = jnp.asarray(rng.standard_normal((bsr.ncols, 128))).astype(dtype)
+    out = kops.bsr_spmm(bsr, h, fk=128, interpret=True)
+    ref = bsr_spmm_ref(bsr, h.astype(jnp.float32))
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, dtype=np.float32),
+                               np.asarray(ref), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("k", [32, 128])
+@pytest.mark.parametrize("max_deg_cap", [None, 4])
+def test_ell_spmm_sweep(rng, k, max_deg_cap):
+    coo, dense = random_coo(rng, 60, 50, 300)
+    ell = C.ell_from_coo(coo, max_deg=max_deg_cap)
+    h = jnp.asarray(rng.standard_normal((50, k)).astype(np.float32))
+    out = kops.ell_spmm(ell, h, interpret=True)
+    ref = spmm_ell_ref(ell, h, C.get_semiring("sum"))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("d", [16, 64, 130])
+@pytest.mark.parametrize("scale_by_a", [True, False])
+def test_sddmm_sweep(rng, d, scale_by_a):
+    coo, dense = random_coo(rng, 100, 90, 700)
+    bsr = C.bsr_from_coo(coo, br=16, bc=128)
+    x = jnp.asarray(rng.standard_normal((bsr.nrows, d)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((bsr.ncols, d)).astype(np.float32))
+    out = kops.sddmm_bsr(bsr, x, y, scale_by_a=scale_by_a, interpret=True)
+    ref = sddmm_bsr_ref(bsr, x, y, scale_by_a=scale_by_a)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-3,
+                               atol=1e-3)
+
+
+@pytest.mark.parametrize("edge_op", ["softmax", "sigmoid", "none"])
+def test_fusedmm_kernel(rng, edge_op):
+    coo, dense = random_coo(rng, 90, 80, 600)
+    bsr = C.bsr_from_coo(coo, br=16, bc=128)
+    x = jnp.asarray(rng.standard_normal((bsr.nrows, 32)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((bsr.ncols, 32)).astype(np.float32))
+    h = jnp.asarray(rng.standard_normal((bsr.ncols, 64)).astype(np.float32))
+    out = kops.fusedmm_bsr(bsr, x, y, h, edge_op=edge_op, interpret=True)
+    if edge_op == "softmax":
+        ref = fusedmm_softmax_ref(bsr, x, y, h)[: bsr.nrows]
+    else:
+        ref = kops.fusedmm_bsr(bsr, x, y, h, edge_op=edge_op, interpret=None)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-3,
+                               atol=1e-3)
+
+
+@pytest.mark.parametrize("e,t,dm,f", [(4, 512, 128, 256), (2, 256, 256, 128)])
+def test_ragged_gemm_sweep(rng, e, t, dm, f):
+    from repro.kernels.ragged_gemm import ragged_gemm_pallas
+    tm = 128
+    x = jnp.asarray(rng.standard_normal((t, dm)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((e, dm, f)).astype(np.float32))
+    te = jnp.asarray(rng.integers(0, e, t // tm).astype(np.int32))
+    out = ragged_gemm_pallas(x, w, te, tm=tm, interpret=True)
+    ref = jnp.concatenate(
+        [x.reshape(-1, tm, dm)[i] @ w[te[i]] for i in range(t // tm)])
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("window", [None, 96])
+def test_flash_attention_sweep(rng, hq, hkv, window):
+    from repro.kernels.flash_attention import flash_attention_pallas
+    B, S, D = 2, 256, 64
+    q = jnp.asarray(rng.standard_normal((B, hq, S, D)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, hkv, S, D)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, hkv, S, D)).astype(np.float32))
+    out = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                 bq=128, bk=128, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_flash_attention_decode_tail(rng):
+    from repro.kernels.flash_attention import flash_attention_pallas
+    B, H, S, T, D = 1, 2, 128, 384, 64
+    q = jnp.asarray(rng.standard_normal((B, H, S, D)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((B, H, T, D)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((B, H, T, D)).astype(np.float32))
+    out = flash_attention_pallas(q, k, v, causal=True, bq=128, bk=128,
+                                 interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4,
+                               atol=1e-4)

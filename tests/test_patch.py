@@ -1,0 +1,70 @@
+"""patch()/unpatch() interception (§3.6)."""
+import numpy as np
+import jax.numpy as jnp
+
+import importlib
+
+import repro.core as C
+
+P = importlib.import_module("repro.core.patch")  # module, not the function
+from conftest import random_coo
+
+
+def test_patch_toggles_binding():
+    P.unpatch()
+    assert not C.is_patched()
+    base_fn = P.resolve("spmm")
+    C.patch()
+    assert C.is_patched()
+    tuned_fn = P.resolve("spmm")
+    assert base_fn is not tuned_fn
+    C.unpatch()
+    assert P.resolve("spmm") is base_fn
+
+
+def test_patch_version_bumps():
+    P.unpatch()
+    v0 = C.patch_version()
+    C.patch()
+    assert C.patch_version() == v0 + 1
+    C.unpatch()
+    assert C.patch_version() == v0 + 2
+
+
+def test_patched_context_restores_state():
+    P.unpatch()
+    with C.patched(True):
+        assert C.is_patched()
+        with C.patched(False):
+            assert not C.is_patched()
+        assert C.is_patched()
+    assert not C.is_patched()
+
+
+def test_patch_fn_decorator(rng):
+    coo, dense = random_coo(rng, 30, 30, 100)
+    g = C.build_cached_graph(coo, tune=False)
+    h = jnp.asarray(rng.standard_normal((30, 8)).astype(np.float32))
+
+    @C.patch_fn
+    def run(gg, hh):
+        assert C.is_patched()
+        return P.resolve("spmm")(gg, hh, "sum")
+
+    P.unpatch()
+    out = run(g, h)
+    np.testing.assert_allclose(np.asarray(out),
+                               dense @ np.asarray(h), rtol=1e-4, atol=1e-4)
+    assert not C.is_patched()
+
+
+def test_both_paths_same_result(rng):
+    """The paper's central accuracy claim: patched == unpatched numerics."""
+    coo, dense = random_coo(rng, 40, 40, 200)
+    g = C.build_cached_graph(coo, tune=False)
+    h = jnp.asarray(rng.standard_normal((40, 16)).astype(np.float32))
+    with C.patched(True):
+        a = P.resolve("spmm")(g, h, "sum")
+    with C.patched(False):
+        b = P.resolve("spmm")(g, h, "sum")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)

@@ -1,0 +1,63 @@
+"""Roofline HLO analysis: loop-aware flop/collective counting validated on
+a compiled scan with known ground truth (single device; the multi-device
+variant runs in test_multidevice.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.roofline import CollectiveStats
+
+
+def test_scan_trip_count_multiplicity():
+    L, N, K = 7, 64, 32
+
+    def f(w, x):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), ()
+        c, _ = jax.lax.scan(body, x, w)
+        return c.sum()
+
+    w = jnp.zeros((L, K, K))
+    x = jnp.zeros((N, K))
+    comp = jax.jit(f).lower(w, x).compile()
+    st = analyze_hlo(comp.as_text())
+    expected = L * 2 * N * K * K
+    assert abs(st.dot_flops - expected) / expected < 0.01, \
+        (st.dot_flops, expected)
+
+
+def test_nested_scan_multiplicity():
+    L, M, K = 3, 4, 16
+
+    def f(w, x):
+        def outer(c, wi):
+            def inner(ci, _):
+                return jnp.tanh(ci @ wi), ()
+            ci, _ = jax.lax.scan(inner, c, None, length=M)
+            return ci, ()
+        c, _ = jax.lax.scan(outer, x, w)
+        return c.sum()
+
+    w = jnp.zeros((L, K, K))
+    x = jnp.zeros((8, K))
+    comp = jax.jit(f).lower(w, x).compile()
+    st = analyze_hlo(comp.as_text())
+    expected = L * M * 2 * 8 * K * K
+    assert abs(st.dot_flops - expected) / expected < 0.01, \
+        (st.dot_flops, expected)
+
+
+def test_no_collectives_on_single_device():
+    def f(x):
+        return (x @ x).sum()
+
+    comp = jax.jit(f).lower(jnp.zeros((32, 32))).compile()
+    st = analyze_hlo(comp.as_text())
+    assert st.coll_bytes == 0
+
+
+def test_collective_stats_dataclass():
+    cs = CollectiveStats(total_bytes=10.0, by_kind={"all-reduce": 10.0},
+                         count=1, top_ops=[("all-reduce", 10.0, "f32[5]")])
+    assert cs.total_bytes == 10.0

@@ -1,0 +1,101 @@
+"""Sparse container correctness: every format's todense == the COO dense,
+transpose/normalize identities, padding invariants. Includes hypothesis
+property tests over random graphs."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (bsr_from_coo, coo_from_edges, coo_transpose,
+                        csr_from_coo, ell_from_coo, gcn_normalize,
+                        row_degrees)
+from conftest import random_coo
+
+
+def test_coo_todense(small_graph):
+    coo, dense = small_graph
+    np.testing.assert_allclose(np.asarray(coo.todense()), dense, rtol=1e-6)
+
+
+def test_csr_roundtrip(small_graph):
+    coo, dense = small_graph
+    csr = csr_from_coo(coo)
+    np.testing.assert_allclose(np.asarray(csr.to_coo().todense()), dense,
+                               rtol=1e-6)
+    # cached row expansion is consistent with indptr
+    indptr = np.asarray(csr.indptr)
+    assert indptr[-1] == coo.nse
+
+
+@pytest.mark.parametrize("br,bc", [(16, 16), (8, 32), (32, 8)])
+def test_bsr_todense(small_graph, br, bc):
+    coo, dense = small_graph
+    bsr = bsr_from_coo(coo, br=br, bc=bc)
+    d = np.asarray(bsr.todense())[: coo.nrows, : coo.ncols]
+    np.testing.assert_allclose(d, dense, rtol=1e-6)
+    # invariants: sorted blocks, every block row non-empty
+    blk = np.asarray(bsr.blk_row)[: bsr.n_real_blocks]
+    assert (np.diff(blk) >= 0).all()
+    assert set(range(bsr.n_block_rows)) <= set(blk.tolist())
+
+
+def test_ell_roundtrip(small_graph):
+    coo, dense = small_graph
+    ell = ell_from_coo(coo)
+    # reconstruct dense from ELL
+    d = np.zeros(coo.shape, np.float32)
+    idx, val = np.asarray(ell.idx), np.asarray(ell.val)
+    for i in range(coo.nrows):
+        for j in range(ell.max_deg):
+            if idx[i, j] < coo.ncols:
+                d[i, idx[i, j]] += val[i, j]
+    np.testing.assert_allclose(d, dense, rtol=1e-6)
+
+
+def test_transpose(small_graph):
+    coo, dense = small_graph
+    coo_t = coo_transpose(coo)
+    np.testing.assert_allclose(np.asarray(coo_t.todense()), dense.T,
+                               rtol=1e-6)
+
+
+def test_degrees(small_graph):
+    coo, dense = small_graph
+    deg = np.asarray(row_degrees(coo))
+    np.testing.assert_allclose(deg, (dense != 0).sum(1), rtol=1e-6)
+
+
+def test_gcn_normalize_square(rng):
+    # square graph so D^-1/2 (A+I) D^-1/2 is fully defined
+    from conftest import random_coo as rc
+    coo, dense = rc(rng, 40, 40, 300)
+    a_n = gcn_normalize(coo, add_self_loops=True)
+    dn = np.asarray(a_n.todense())
+    a_sl = dense + np.eye(40, dtype=np.float32)
+    deg = a_sl.sum(1)
+    dinv = 1.0 / np.sqrt(np.maximum(deg, 1e-12))
+    exp = dinv[:, None] * a_sl * dinv[None, :]
+    np.testing.assert_allclose(dn, exp, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(4, 40), m=st.integers(4, 40),
+       density=st.floats(0.02, 0.5), seed=st.integers(0, 1000))
+def test_formats_agree_property(n, m, density, seed):
+    rng = np.random.default_rng(seed)
+    nnz = max(1, int(n * m * density))
+    coo, dense = random_coo(rng, n, m, nnz, pad_to=nnz + 7)
+    bsr = bsr_from_coo(coo, br=8, bc=8)
+    ell = ell_from_coo(coo)
+    d_bsr = np.asarray(bsr.todense())[:n, :m]
+    np.testing.assert_allclose(d_bsr, dense, rtol=1e-5, atol=1e-6)
+    # spmm against ones must agree across formats (sum semiring)
+    from repro.core.semiring import get_semiring
+    from repro.kernels.ref import spmm_coo_ref, spmm_ell_ref
+    h = jnp.asarray(rng.standard_normal((m, 8)).astype(np.float32))
+    sr = get_semiring("sum")
+    out_coo = np.asarray(spmm_coo_ref(coo, h, sr))
+    out_ell = np.asarray(spmm_ell_ref(ell, h, sr))
+    np.testing.assert_allclose(out_coo, dense @ np.asarray(h), rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(out_ell, out_coo, rtol=1e-4, atol=1e-5)
