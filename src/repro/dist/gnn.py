@@ -1,0 +1,153 @@
+"""Distributed GNN message passing: 1-D row partition + halo'd ELL SpMM.
+
+The adjacency is split into ``num_parts`` contiguous row bands (DGL-style
+1-D vertex-cut is future work — see ROADMAP); each band is stored ELLPACK
+(:class:`repro.core.sparse.ELL`) because row-banded adjacencies are exactly
+the regime where per-row padded neighbor lists beat COO: the gather index
+tensor is rectangular and static, and the halo — the set of *remote* feature
+rows a band needs — is just the columns the local ELL indexes.
+
+``distributed_spmm`` runs one step of A @ H under ``shard_map``: the feature
+matrix H arrives row-sharded over the same axis, the halo exchange is a
+tiled ``all_gather`` of H (every remote row a band could touch, fetched in
+one fused collective — on TPU this beats per-neighbor sends by a wide
+margin), then the band's ELL gather/multiply/reduce runs locally. Values and
+inverse degrees come pre-normalized from the :class:`CachedGraph` machinery
+(core/spmm.py §3.3 caching), so nothing graph-static is recomputed per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import sparse as sp
+from repro.core.cache import CachedGraph, build_cached_graph
+
+Array = Any
+
+__all__ = ["DistGraph", "build_dist_graph", "distributed_spmm"]
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["idx", "val", "inv_deg"],
+         meta_fields=["nrows", "ncols", "parts", "rows_per_part"])
+@dataclasses.dataclass(frozen=True)
+class DistGraph:
+    """Row-banded ELL adjacency, stackable over the partition axis.
+
+    ``idx``/``val``: (parts, rows_per_part, max_deg) with the ELL pad
+    sentinel ``idx == ncols``; column ids are GLOBAL (they index the
+    gathered H). ``inv_deg``: (parts, rows_per_part) cached 1/deg for the
+    mean semiring. Rows past ``nrows`` (partition padding) are empty.
+    """
+
+    idx: Array
+    val: Array
+    inv_deg: Array
+    nrows: int
+    ncols: int
+    parts: int
+    rows_per_part: int
+
+    @property
+    def max_deg(self) -> int:
+        return self.idx.shape[-1]
+
+    @property
+    def shape(self):
+        return (self.nrows, self.ncols)
+
+
+def build_dist_graph(a: Union[sp.COO, sp.CSR, CachedGraph],
+                     num_parts: int) -> DistGraph:
+    """Host-side one-time partition (the cached-graph philosophy: all
+    per-part structure is built once, never inside the training step)."""
+    if isinstance(a, sp.CSR):
+        a = a.to_coo()
+    if isinstance(a, sp.COO):
+        a = build_cached_graph(a, tune=False)
+    coo = a.coo
+    nrows, ncols = coo.nrows, coo.ncols
+    rp = -(-nrows // num_parts)                   # rows per band, padded
+    row = np.asarray(coo.row)[: coo.nse]
+    col = np.asarray(coo.col)[: coo.nse]
+    val = np.asarray(coo.val)[: coo.nse]
+    deg = np.asarray(a.degrees)
+
+    # common max_deg across bands so the per-part ELLs stack into one array
+    counts = np.bincount(row, minlength=nrows)
+    max_deg = max(int(counts.max()) if counts.size else 1, 1)
+
+    idxs, vals, invs = [], [], []
+    for p in range(num_parts):
+        lo, hi = p * rp, min((p + 1) * rp, nrows)
+        n_loc = max(hi - lo, 0)          # trailing bands can be empty
+        if n_loc:
+            m = (row >= lo) & (row < hi)
+            part = sp.coo_from_edges(col[m], row[m] - lo, val[m],
+                                     nrows=n_loc, ncols=ncols)
+            ell = sp.ell_from_coo(part, max_deg=max_deg)
+            idx_p, val_p = np.asarray(ell.idx), np.asarray(ell.val)
+        else:
+            idx_p = np.empty((0, max_deg), np.int32)
+            val_p = np.empty((0, max_deg), val.dtype)
+        pad = rp - n_loc
+        idxs.append(np.pad(idx_p, ((0, pad), (0, 0)),
+                           constant_values=ncols))
+        vals.append(np.pad(val_p, ((0, pad), (0, 0))))
+        d = np.pad(deg[lo:lo + n_loc], (0, pad), constant_values=1.0)
+        invs.append(1.0 / np.maximum(d, 1.0))
+
+    return DistGraph(idx=jnp.asarray(np.stack(idxs), jnp.int32),
+                     val=jnp.asarray(np.stack(vals)),
+                     inv_deg=jnp.asarray(np.stack(invs), jnp.float32),
+                     nrows=nrows, ncols=ncols, parts=num_parts,
+                     rows_per_part=rp)
+
+
+def _partition_axis(mesh: Mesh) -> str:
+    return "data" if "data" in mesh.shape else next(iter(mesh.shape))
+
+
+def distributed_spmm(g: DistGraph, h: Array, mesh: Mesh,
+                     reduce: str = "sum") -> Array:
+    """A @ H with A row-banded over the mesh's data axis. ``h``: (N, K)
+    global features (sharded or not — shard_map partitions it); returns the
+    (N, K) global result, row-sharded the same way."""
+    axis = _partition_axis(mesh)
+    assert mesh.shape[axis] == g.parts, (mesh.shape, g.parts)
+    assert reduce in ("sum", "mean"), reduce
+    n, k = h.shape
+    assert n == g.ncols, (n, g.ncols)
+    # H lives in COLUMN space: pad its rows only so shard_map can split
+    # them evenly over the axis (the tiled all_gather restores order, so
+    # per-device chunk size is free to differ from rows_per_part)
+    h_pad = -(-n // g.parts) * g.parts - n
+    if h_pad:
+        h = jnp.pad(h, ((0, h_pad), (0, 0)))
+
+    def body(idx, val, inv, h_loc):
+        # halo exchange: one fused all-gather of the row-sharded features
+        hg = jax.lax.all_gather(h_loc, axis, axis=0, tiled=True)   # (N_pad, K)
+        gathered = jnp.take(hg, idx[0], axis=0, mode="fill",
+                            fill_value=0)                          # (rp, md, K)
+        msgs = val[0][..., None].astype(hg.dtype) * gathered
+        out = jnp.where((idx[0] < g.ncols)[..., None], msgs, 0).sum(axis=1)
+        if reduce == "mean":
+            out = out * inv[0][:, None]
+        return out.astype(h_loc.dtype)
+
+    from repro.dist import shard_map
+    out = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis, None, None), P(axis, None, None),
+                  P(axis, None), P(axis, None)),
+        out_specs=P(axis, None), check_rep=False,
+    )(g.idx, g.val, g.inv_deg, h)
+    return out[: g.nrows]

@@ -1,0 +1,139 @@
+"""Partitioning tables for the LM stack: LM_RULES + NamedSharding builders.
+
+``LM_RULES`` is the baseline logical->mesh mapping for the production meshes
+built by :mod:`repro.dist.mesh` ('pod' x 'data' x 'model'):
+
+* ``batch``      -> ('pod', 'data')  — data parallel, cross-pod outermost
+* ``d_ff``/``vocab``/``qkv``/``heads``/``kv_heads``/``experts`` -> 'model'
+  — tensor/expert parallel over the fast ICI axis
+* ``seq``/``d_model`` -> unsharded by default; ``override(seq="model")``
+  turns on sequence parallelism (the dry-run's 'sp' rule set).
+
+The ``*_shardings`` builders map whole pytrees (params, TrainState, batch
+dicts, decode caches) to matching pytrees of ``NamedSharding``; leaves are
+classified by their path (leaf name + enclosing keys), so optimizer moments
+and error-feedback residuals — whose subtrees mirror the params — pick up
+the params' layout for free.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.dist.sharding import Rules, resolve_spec
+
+Array = Any
+
+__all__ = ["LM_RULES", "param_logical_axes", "param_shardings",
+           "state_shardings", "batch_shardings", "cache_shardings"]
+
+
+LM_RULES = Rules({
+    "batch": ("pod", "data"),
+    "seq": (),
+    "d_model": (),
+    "d_ff": ("model",),
+    "d_inner": ("model",),
+    "vocab": ("model",),
+    "qkv": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "experts": ("model",),
+    "expert_capacity": (),
+    "d_state": (),
+})
+
+
+# Trailing-dim logical axes per parameter leaf name (see PARAM_AXES in
+# models/lm/layers.py). Leaves under a stacked "layers" subtree carry one
+# extra leading (n_layers,) dim — left-padded with None below. Unlisted
+# leaves (norm scales, router, mamba2 SSM scalars) replicate.
+_LEAF_AXES: dict[str, tuple] = {
+    "embed": ("vocab", "d_model"),
+    "lm_head": ("d_model", "vocab"),
+    "meta": (None, "d_model"),
+    "wq": ("d_model", "qkv"),
+    "wk": ("d_model", "qkv"),
+    "wv": ("d_model", "qkv"),
+    "bq": ("qkv",),
+    "bk": ("qkv",),
+    "bv": ("qkv",),
+    "wo": ("qkv", "d_model"),
+    "wg": ("d_model", "d_ff"),
+    "wu": ("d_model", "d_ff"),
+    "wd": ("d_ff", "d_model"),
+    "in_proj": ("d_model", "d_inner"),
+    "out_proj": ("d_inner", "d_model"),
+}
+
+
+def _path_keys(path) -> list:
+    return [getattr(k, "key", getattr(k, "name", None)) for k in path]
+
+
+def param_logical_axes(path, leaf) -> tuple:
+    """Logical axes for one (possibly layer-stacked) parameter leaf."""
+    ndim = len(leaf.shape)
+    keys = _path_keys(path)
+    name = next((k for k in reversed(keys) if isinstance(k, str)), None)
+    base = _LEAF_AXES.get(name)
+    if base is None:
+        return (None,) * ndim
+    if "moe" in keys and name in ("wg", "wu", "wd"):
+        base = ("experts",) + base      # stacked (E·R, D, F) expert weights
+    if len(base) > ndim:                # e.g. dense-name collision: replicate
+        return (None,) * ndim
+    return (None,) * (ndim - len(base)) + tuple(base)
+
+
+def _sharding(mesh: Mesh, axes, leaf, rules) -> NamedSharding:
+    ndim = len(leaf.shape)
+    axes = tuple(axes)[:ndim] + (None,) * max(0, ndim - len(axes))
+    return NamedSharding(mesh, resolve_spec(axes, mesh, leaf.shape, rules))
+
+
+def param_shardings(mesh: Mesh, params, rules: Optional[Rules] = None):
+    """Params pytree -> matching pytree of NamedSharding."""
+    rules = rules or LM_RULES
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _sharding(mesh, param_logical_axes(p, l), l, rules),
+        params)
+
+
+def state_shardings(mesh: Mesh, state, rules: Optional[Rules] = None):
+    """TrainState (params + optimizer moments + EF residuals) -> shardings.
+
+    Moment/residual subtrees mirror the params, so path-based classification
+    lays them out identically to the parameter they track."""
+    return param_shardings(mesh, state, rules)
+
+
+def batch_shardings(mesh: Mesh, batch: dict, rules: Optional[Rules] = None
+                    ) -> dict:
+    """Input batch dict -> {key: NamedSharding}. Convention: dim 0 is the
+    global batch, dim 1 the sequence, anything further is replicated."""
+    rules = rules or LM_RULES
+    return {k: _sharding(mesh, ("batch", "seq"), v, rules)
+            for k, v in batch.items()}
+
+
+# Decode-cache layout: (L, B, KV, capacity, head_dim) buffers shard over
+# batch + kv-heads; positions/slot maps shard over batch only.
+_CACHE_AXES: dict[str, tuple] = {
+    "pos": ("batch",),
+    "k": (None, "batch", "kv_heads", None, None),
+    "v": (None, "batch", "kv_heads", None, None),
+    "slot_pos": ("batch", None),
+    "ssm_state": (None, "batch", "heads", None, None),
+    "conv_buf": (None, "batch", None, None),
+}
+
+
+def cache_shardings(mesh: Mesh, cache: dict, rules: Optional[Rules] = None
+                    ) -> dict:
+    """Decode-cache dict -> {key: NamedSharding}."""
+    rules = rules or LM_RULES
+    return {k: _sharding(mesh, _CACHE_AXES.get(k, ()), v, rules)
+            for k, v in cache.items()}

@@ -1,0 +1,157 @@
+"""Logical-axis sharding: rule sets, the active-rules context, constraints.
+
+Model code never names mesh axes. It annotates tensors with *logical* axes
+(``("batch", "seq", "d_model")``); a :class:`Rules` table maps each logical
+axis to an ordered tuple of *candidate* mesh axes, and resolution intersects
+the candidates with the mesh that is actually active:
+
+* a candidate axis absent from the mesh is skipped (the same model code runs
+  on a ('data', 'model') pod slice and a ('pod', 'data', 'model') multi-pod
+  mesh — 'pod' simply drops out on the former);
+* a mesh axis already consumed by an earlier dimension of the same tensor is
+  skipped (a PartitionSpec may not repeat axes);
+* a candidate whose size does not divide the dimension is skipped, so smoke
+  configs with tiny dims degrade to replication instead of erroring.
+
+``shard_constraint`` is the single entry point model code uses; it is a
+strict no-op when no mesh is active or the mesh has one device, which is what
+keeps the 1-device CPU test suite oblivious to all of this.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Mapping, Optional, Sequence
+
+import jax
+from jax.interpreters import pxla
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = Any
+
+__all__ = ["Rules", "use_rules", "current_rules", "shard_constraint",
+           "resolve_spec", "logical_sharding", "_current_mesh"]
+
+
+def _normalize(axes) -> tuple[str, ...]:
+    if axes is None:
+        return ()
+    if isinstance(axes, str):
+        return (axes,)
+    return tuple(axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Immutable logical-axis -> candidate-mesh-axes table."""
+
+    table: Mapping[str, tuple[str, ...]]
+
+    def __post_init__(self):
+        object.__setattr__(self, "table",
+                           {k: _normalize(v) for k, v in self.table.items()})
+
+    def axes_for(self, name: str) -> tuple[str, ...]:
+        return self.table.get(name, ())
+
+    def override(self, **kw) -> "Rules":
+        """New rule set with the given logical axes remapped, e.g.
+        ``LM_RULES.override(seq="model")`` turns on sequence parallelism."""
+        return Rules(table={**self.table, **kw})
+
+
+# --------------------------------------------------------------------------
+# Active mesh / active rules
+# --------------------------------------------------------------------------
+
+def _current_mesh() -> Optional[Mesh]:
+    """The mesh entered via ``with mesh:`` — None when outside any mesh."""
+    mesh = pxla.thread_resources.env.physical_mesh
+    return None if mesh.empty else mesh
+
+
+class _RulesStack(threading.local):
+    def __init__(self):
+        self.stack: list[Rules] = []
+
+
+_ACTIVE = _RulesStack()
+
+
+def current_rules() -> Rules:
+    """Innermost ``use_rules`` rule set, defaulting to ``LM_RULES``."""
+    if _ACTIVE.stack:
+        return _ACTIVE.stack[-1]
+    from repro.dist.partition import LM_RULES   # lazy: avoids import cycle
+    return LM_RULES
+
+
+@contextlib.contextmanager
+def use_rules(rules: Rules):
+    """Activate a rule set for every ``shard_constraint`` traced inside."""
+    _ACTIVE.stack.append(rules)
+    try:
+        yield rules
+    finally:
+        _ACTIVE.stack.pop()
+
+
+# --------------------------------------------------------------------------
+# Resolution
+# --------------------------------------------------------------------------
+
+def resolve_spec(logical_axes: Sequence[Optional[str]], mesh: Mesh,
+                 shape: Sequence[int], rules: Optional[Rules] = None) -> P:
+    """Logical axes -> PartitionSpec against ``mesh`` under ``rules``.
+
+    Applies the three skip conditions documented in the module docstring;
+    the result never repeats a mesh axis and always divides ``shape``.
+    """
+    rules = rules or current_rules()
+    assert len(logical_axes) == len(shape), (logical_axes, shape)
+    used: set[str] = set()
+    out: list = []
+    for dim, name in zip(shape, logical_axes):
+        if name is None:
+            out.append(None)
+            continue
+        picked: list[str] = []
+        prod = 1
+        for ax in rules.axes_for(name):
+            size = mesh.shape.get(ax)
+            if size is None or ax in used:
+                continue
+            if dim % (prod * size) != 0:
+                continue
+            picked.append(ax)
+            prod *= size
+        used.update(picked)
+        if not picked:
+            out.append(None)
+        elif len(picked) == 1:
+            out.append(picked[0])
+        else:
+            out.append(tuple(picked))
+    while out and out[-1] is None:   # trailing Nones are implicit
+        out.pop()
+    return P(*out)
+
+
+def logical_sharding(mesh: Mesh, logical_axes: Sequence[Optional[str]],
+                     shape: Sequence[int],
+                     rules: Optional[Rules] = None) -> NamedSharding:
+    """NamedSharding for a tensor annotated with logical axes."""
+    return NamedSharding(mesh, resolve_spec(logical_axes, mesh, shape, rules))
+
+
+def shard_constraint(x: Array, logical_axes: Sequence[Optional[str]]) -> Array:
+    """Constrain ``x`` to the sharding its logical axes resolve to under the
+    active mesh + rules. No-op outside a mesh or on a 1-device mesh."""
+    mesh = _current_mesh()
+    if mesh is None or mesh.size <= 1:
+        return x
+    spec = resolve_spec(logical_axes, mesh, x.shape)
+    if all(a is None for a in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

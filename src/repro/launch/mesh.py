@@ -1,31 +1,5 @@
-"""Production mesh builders.
-
-Functions, not module constants — importing this module never touches jax
-device state (the dry-run sets XLA_FLAGS before any jax import; everything
-else sees the 1-device CPU default).
-"""
-from __future__ import annotations
-
-import jax
+"""Back-compat shim: the mesh builders moved to :mod:`repro.dist.mesh` when
+the distributed-execution subsystem was consolidated. Import from there."""
+from repro.dist.mesh import make_local_mesh, make_production_mesh
 
 __all__ = ["make_production_mesh", "make_local_mesh"]
-
-
-def make_production_mesh(*, multi_pod: bool = False):
-    """16x16 single pod (256 chips) or 2x16x16 (512 chips, 2 pods).
-
-    Axis semantics: 'pod' = cross-pod data parallel (slow links — candidates
-    for gradient compression), 'data' = in-pod data parallel / FSDP,
-    'model' = tensor/expert parallel (fast ICI).
-    """
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
-
-
-def make_local_mesh(data: int = 1, model: int = 1):
-    """Small mesh over whatever devices exist (tests / local runs)."""
-    n = len(jax.devices())
-    data = min(data, n)
-    model = min(model, max(n // data, 1))
-    return jax.make_mesh((data, model), ("data", "model"))

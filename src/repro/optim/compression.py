@@ -24,10 +24,16 @@ __all__ = ["int8_compress", "int8_decompress", "ErrorFeedbackState",
            "ef_init", "ef_compress_update"]
 
 
-def int8_compress(x: Array) -> tuple[Array, Array]:
-    """Symmetric per-tensor int8: returns (q, scale). scale is f32 scalar."""
-    amax = jnp.max(jnp.abs(x)).astype(jnp.float32)
-    scale = jnp.maximum(amax, 1e-12) / 127.0
+def int8_compress(x: Array, amax: Array | None = None) -> tuple[Array, Array]:
+    """Symmetric per-tensor int8: returns (q, scale). scale is f32 scalar.
+
+    ``amax`` overrides the locally computed absmax — the cross-pod reduce
+    (dist/collectives.py::compressed_psum) passes a pmax'd global absmax so
+    every participant quantizes onto the same grid and the int32 sum of the
+    quantized values dequantizes with one shared scale."""
+    if amax is None:
+        amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax.astype(jnp.float32), 1e-12) / 127.0
     q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127
                  ).astype(jnp.int8)
     return q, scale

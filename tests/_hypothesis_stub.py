@@ -1,0 +1,73 @@
+"""Minimal stand-in for the parts of ``hypothesis`` the test suite uses,
+so property tests still run (as deterministic sampled parametrizations)
+when the real package isn't installed.
+
+Covers: ``given`` with keyword strategies, ``settings(max_examples=,
+deadline=)``, and ``strategies.integers/floats/sampled_from``. Sampling is
+seeded and deterministic — no shrinking, no database. Install the real
+``hypothesis`` (requirements-dev.txt) for full property testing.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import itertools
+import random
+import types
+
+_DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rnd: rnd.randint(min_value, max_value))
+
+
+def floats(min_value: float, max_value: float) -> _Strategy:
+    return _Strategy(lambda rnd: rnd.uniform(min_value, max_value))
+
+
+def sampled_from(options) -> _Strategy:
+    options = list(options)
+    return _Strategy(lambda rnd: rnd.choice(options))
+
+
+strategies = types.SimpleNamespace(integers=integers, floats=floats,
+                                   sampled_from=sampled_from)
+st = strategies
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples",
+                        getattr(fn, "_stub_max_examples", _DEFAULT_EXAMPLES))
+            rnd = random.Random(0)
+            for i in itertools.count():
+                if i >= n:
+                    break
+                drawn = {k: s.example(rnd) for k, s in strats.items()}
+                fn(*args, **kwargs, **drawn)
+        # hide the drawn params from pytest's fixture resolution
+        del wrapper.__wrapped__
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[p for name, p in sig.parameters.items()
+                        if name not in strats])
+        return wrapper
+    return deco

@@ -6,7 +6,10 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:     # fall back to the deterministic sampling stub
+    from _hypothesis_stub import given, settings, strategies as st
 
 import repro.core as C
 from repro.core import dispatch as D

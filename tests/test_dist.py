@@ -1,0 +1,225 @@
+"""repro.dist on 1 device: rule resolution, shard_constraint no-op
+semantics, partition builders' pytree structure, and the host-side
+distributed-graph partitioner. Multi-device behaviour (collectives,
+pipeline, distributed SpMM execution) lives in test_multidevice.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import (LM_RULES, Rules, batch_shardings, build_dist_graph,
+                        cache_shardings, param_shardings, state_shardings)
+from repro.dist.sharding import (_current_mesh, current_rules, resolve_spec,
+                                 shard_constraint, use_rules)
+
+
+# --------------------------------------------------------------------------
+# shard_constraint no-op semantics
+# --------------------------------------------------------------------------
+
+def test_shard_constraint_noop_without_mesh():
+    x = jnp.ones((4, 8, 16))
+    assert _current_mesh() is None
+    assert shard_constraint(x, ("batch", "seq", "d_model")) is x
+
+
+def test_shard_constraint_noop_on_one_device_mesh():
+    x = jnp.ones((4, 8, 16))
+    mesh = jax.make_mesh((1,), ("data",))
+    with mesh:
+        assert _current_mesh() is mesh
+        assert shard_constraint(x, ("batch", "seq", "d_model")) is x
+    assert _current_mesh() is None
+
+
+def test_shard_constraint_noop_under_jit():
+    # must also hold while tracing (the path every model call exercises)
+    @jax.jit
+    def f(x):
+        return shard_constraint(x, ("batch", "seq", "d_model")) * 2
+    out = f(jnp.ones((2, 4, 8)))
+    assert out.shape == (2, 4, 8)
+    assert float(out[0, 0, 0]) == 2.0
+
+
+# --------------------------------------------------------------------------
+# Rules / resolution (pure metadata — no multi-device mesh needed)
+# --------------------------------------------------------------------------
+
+def _fake_mesh_shapes():
+    """resolve_spec only reads mesh.shape; fake a production-shaped mesh."""
+    class FakeMesh:
+        shape = {"pod": 2, "data": 4, "model": 8}
+    return FakeMesh()
+
+
+def test_resolve_spec_basic_and_missing_axes():
+    mesh = _fake_mesh_shapes()
+    spec = resolve_spec(("batch", "seq", "d_ff"), mesh, (16, 32, 64), LM_RULES)
+    assert spec == P(("pod", "data"), None, "model")
+    # axes absent from the mesh drop out
+    class DataOnly:
+        shape = {"data": 4}
+    spec = resolve_spec(("batch", None, "d_ff"), DataOnly(), (16, 32, 64),
+                        LM_RULES)
+    assert spec == P("data")            # trailing Nones are implicit
+
+
+def test_resolve_spec_divisibility_guard():
+    mesh = _fake_mesh_shapes()
+    # 6 % 8 != 0 -> d_ff falls back to replication; batch dim 6 % 2 == 0
+    # takes 'pod' but then 6//2=3 % 4 != 0 skips 'data'
+    spec = resolve_spec(("batch", "d_ff"), mesh, (6, 6), LM_RULES)
+    assert spec == P("pod")
+
+
+def test_resolve_spec_never_repeats_mesh_axis():
+    mesh = _fake_mesh_shapes()
+    # both logical axes map to 'model': the second must be dropped
+    spec = resolve_spec(("experts", "d_ff"), mesh, (8, 64), LM_RULES)
+    assert spec == P("model")
+
+
+def test_use_rules_and_override():
+    assert current_rules() is LM_RULES
+    sp = LM_RULES.override(seq="model")
+    assert isinstance(sp, Rules)
+    assert sp.axes_for("seq") == ("model",)
+    assert LM_RULES.axes_for("seq") == ()          # original untouched
+    with use_rules(sp):
+        assert current_rules() is sp
+        with use_rules(LM_RULES):
+            assert current_rules() is LM_RULES
+        assert current_rules() is sp
+    assert current_rules() is LM_RULES
+    mesh = _fake_mesh_shapes()
+    with use_rules(sp):
+        spec = resolve_spec(("batch", "seq", None), mesh, (16, 32, 4))
+        assert spec == P(("pod", "data"), "model")
+
+
+# --------------------------------------------------------------------------
+# Partition builders: pytree structure + spec sanity
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lm_state():
+    from repro.configs import get_smoke_config
+    from repro.train import lm as TL
+    cfg = get_smoke_config("llama3-8b")
+    step, opt = TL.make_train_step(cfg)
+    return cfg, TL.shaped_state(cfg, opt)
+
+
+def test_param_shardings_match_param_tree(lm_state):
+    cfg, state = lm_state
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sh = param_shardings(mesh, state.params)
+    assert (jax.tree_util.tree_structure(sh)
+            == jax.tree_util.tree_structure(state.params))
+    leaves = jax.tree_util.tree_leaves(sh)
+    assert leaves and all(isinstance(s, NamedSharding) for s in leaves)
+
+
+def test_state_shardings_cover_full_train_state(lm_state):
+    cfg, state = lm_state
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    sh = state_shardings(mesh, state)
+    assert (jax.tree_util.tree_structure(sh)
+            == jax.tree_util.tree_structure(state))
+    # every sharding is valid for its leaf (shape divides -> constructible)
+    jax.tree_util.tree_map(
+        lambda l, s: s.shard_shape(l.shape), state, sh)
+
+
+def test_batch_and_cache_shardings_are_dicts(lm_state):
+    cfg, state = lm_state
+    from repro.train import lm as TL
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    b = TL.shaped_batch(cfg, 8, 64)
+    sb = batch_shardings(mesh, b, LM_RULES)
+    assert set(sb) == set(b)
+    cache = TL.shaped_cache(cfg, 2, 128)
+    sc = cache_shardings(mesh, cache, LM_RULES)
+    assert set(sc) == set(cache)
+    assert all(isinstance(s, NamedSharding) for s in sc.values())
+
+
+def test_shaped_state_with_mesh_attaches_shardings(lm_state):
+    cfg, _ = lm_state
+    from repro.train import lm as TL
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    st = TL.shaped_state(cfg, TL.adamw(1e-4), mesh)
+    for leaf in jax.tree_util.tree_leaves(st):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+        assert leaf.sharding is not None
+
+
+# --------------------------------------------------------------------------
+# Distributed graph partitioner (host-side structure; exec is multidevice)
+# --------------------------------------------------------------------------
+
+def test_build_dist_graph_partitions_rows(rng):
+    from repro.core import coo_from_edges
+    n, nnz, parts = 50, 300, 4          # 50 % 4 != 0: exercises row padding
+    lin = rng.choice(n * n, size=nnz, replace=False)
+    dst, src = lin // n, lin % n
+    val = rng.standard_normal(nnz).astype(np.float32)
+    a = coo_from_edges(src, dst, val, n, n)
+    g = build_dist_graph(a, parts)
+    assert g.parts == parts
+    assert g.idx.shape == (parts, g.rows_per_part, g.max_deg)
+    assert parts * g.rows_per_part >= n
+    # every edge lands in its owner band; sentinel-padded elsewhere
+    dense = np.zeros((n, n), np.float32)
+    dense[dst, src] = val
+    rebuilt = np.zeros((parts * g.rows_per_part, n), np.float32)
+    idx, v = np.asarray(g.idx), np.asarray(g.val)
+    for p in range(parts):
+        for r in range(g.rows_per_part):
+            for d in range(g.max_deg):
+                if idx[p, r, d] < n:
+                    rebuilt[p * g.rows_per_part + r, idx[p, r, d]] += v[p, r, d]
+    np.testing.assert_allclose(rebuilt[:n], dense, rtol=1e-6)
+    assert (rebuilt[n:] == 0).all()
+
+
+def test_build_dist_graph_empty_trailing_band(rng):
+    # 6 rows over 4 parts: rp = 2, band 3 owns no rows at all
+    from repro.core import coo_from_edges
+    a = coo_from_edges(np.array([0, 1, 2]), np.array([0, 3, 5]),
+                       np.ones(3, np.float32), 6, 6)
+    g = build_dist_graph(a, 4)
+    assert g.idx.shape == (4, 2, g.max_deg)
+    assert (np.asarray(g.idx)[3] == g.ncols).all()   # all-sentinel band
+
+
+def test_distributed_spmm_rectangular(rng):
+    # (8 x 100) adjacency: H has ncols rows, far more than parts*rp
+    from repro.core import coo_from_edges
+    from repro.dist import distributed_spmm
+    nr, nc, nnz, k = 8, 100, 60, 4
+    lin = rng.choice(nr * nc, size=nnz, replace=False)
+    dst, src = lin // nc, lin % nc
+    val = rng.standard_normal(nnz).astype(np.float32)
+    a = coo_from_edges(src, dst, val, nr, nc)
+    g = build_dist_graph(a, 1)
+    h = jnp.asarray(rng.standard_normal((nc, k)), jnp.float32)
+    mesh = jax.make_mesh((1,), ("data",))
+    with mesh:
+        out = jax.jit(lambda hh: distributed_spmm(g, hh, mesh))(h)
+    dense = np.zeros((nr, nc), np.float32)
+    dense[dst, src] = val
+    np.testing.assert_allclose(np.asarray(out), dense @ np.asarray(h),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_build_dist_graph_accepts_cached_graph(rng):
+    from repro.core import build_cached_graph, coo_from_edges
+    lin = rng.choice(32 * 32, size=100, replace=False)
+    a = coo_from_edges(lin % 32, lin // 32,
+                       np.ones(100, np.float32), 32, 32)
+    cg = build_cached_graph(a, tune=False)
+    g = build_dist_graph(cg, 2)
+    assert g.nrows == 32 and g.parts == 2
