@@ -2,13 +2,16 @@
 
 Two variants per dataset:
   * analytic (TPU v5e roofline model — the production tuner's basis);
-  * measured (CPU wall-clock of the jitted generated/trusted pair — the
-    honest proxy this container can actually time; the paper's own numbers
-    are CPU wall-clock too).
+  * measured (CPU wall-clock of the jitted generated/trusted candidates —
+    the honest proxy this container can actually time; the paper's own
+    numbers are CPU wall-clock too).
 
-The peak of the measured curve is the 'ideal embedding size' the paper's
-autotuner reports (32 on their Intel box, 64 on AMD — platform-dependent by
-design).
+The measured sweep now times every generated family per K — BSR, the
+(1, K)-tile ELL path (p99-capped), and SELL-C-σ — so the
+SELL-vs-ELL-vs-trusted crossover the autotuner exploits is visible as
+three speedup columns, not one. The peak of the measured curve is the
+'ideal embedding size' the paper's autotuner reports (32 on their Intel
+box, 64 on AMD — platform-dependent by design).
 """
 from __future__ import annotations
 
@@ -17,11 +20,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, time_fn
-from repro.core import bsr_from_coo, get_semiring
+from repro.core import (bsr_from_coo, ell_from_coo, get_semiring,
+                        sell_from_coo)
 from repro.core.autotune import autotune, graph_stats, tuning_curve
 from repro.data import make_dataset
 from repro.kernels import ops as kops
-from repro.kernels.ref import spmm_coo_ref
+from repro.kernels.ref import spmm_coo_ref, spmm_ell_ref
 
 
 def run(datasets=("reddit", "ogbn-proteins"), scale=1 / 64,
@@ -30,6 +34,7 @@ def run(datasets=("reddit", "ogbn-proteins"), scale=1 / 64,
     for name in datasets:
         ds = make_dataset(name, scale=scale)
         a = ds.coo
+        stats = graph_stats(a)
 
         curve = tuning_curve(a, ks=ks)
         for r in curve:
@@ -37,18 +42,27 @@ def run(datasets=("reddit", "ogbn-proteins"), scale=1 / 64,
                  f"speedup={r['speedup']:.2f};kind={r['kind']}")
 
         bsr = bsr_from_coo(a, br=128, bc=128)
+        ell = ell_from_coo(a, max_deg=int(stats.p99_deg))
+        sell = sell_from_coo(a, c=8, sigma=0)
         sr = get_semiring("sum")
         rng = np.random.default_rng(0)
         for k in ks:
             h = jnp.asarray(rng.standard_normal((a.ncols, k)
                                                 ).astype(np.float32))
             t_tr = time_fn(jax.jit(lambda hh: spmm_coo_ref(a, hh, sr)), h)
-            t_gen = time_fn(jax.jit(lambda hh: kops.bsr_spmm(bsr, hh)), h)
-            sp = t_tr / t_gen
+            t_bsr = time_fn(jax.jit(lambda hh: kops.bsr_spmm(bsr, hh)), h)
+            t_ell = time_fn(jax.jit(lambda hh: spmm_ell_ref(ell, hh, sr)), h)
+            t_sell = time_fn(jax.jit(lambda hh: kops.sell_spmm(sell, hh)), h)
+            t_best = min(t_bsr, t_ell, t_sell)
+            best_kind = {t_bsr: "bsr", t_ell: "ell", t_sell: "sell"}[t_best]
+            sp = t_tr / t_best
             rows.append(dict(dataset=name, k=k, t_trusted=t_tr,
-                             t_generated=t_gen, speedup=sp))
-            emit(f"tuning_measured/{name}/k{k}", t_gen,
-                 f"speedup={sp:.2f};trusted_us={t_tr * 1e6:.0f}")
+                             t_bsr=t_bsr, t_ell=t_ell, t_sell=t_sell,
+                             best=best_kind, speedup=sp))
+            emit(f"tuning_measured/{name}/k{k}", t_best,
+                 f"speedup={sp:.2f};best={best_kind};"
+                 f"trusted_us={t_tr * 1e6:.0f};"
+                 f"sell_vs_ell={t_ell / t_sell:.2f}")
         best = max((r for r in rows if r["dataset"] == name),
                    key=lambda r: r["speedup"])
         emit(f"tuning_suggested_k/{name}", 0.0, f"k={best['k']}")

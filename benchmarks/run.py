@@ -1,14 +1,64 @@
 """Benchmark entry point: one bench per paper table/figure + extras.
 
-    PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--only a,b] [--no-json]
 
-CSV rows: name,us_per_call,derived.
+Two outputs per run:
+  * CSV rows streamed to stdout: name,us_per_call,derived;
+  * one entry appended to ``BENCH_<name>.json`` at the repo root per bench —
+    the machine-readable perf trajectory (timestamp + git rev + structured
+    rows), so regressions/speedups are visible across PRs without parsing
+    logs. ``--label`` tags the entry (e.g. "baseline" vs "sell").
 """
 from __future__ import annotations
 
 import argparse
-import sys
+import datetime
+import json
+import os
+import subprocess
 import time
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _git_rev() -> str | None:
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             cwd=_ROOT, capture_output=True, text=True,
+                             timeout=10)
+        return out.stdout.strip() or None
+    except Exception:
+        return None
+
+
+def record_json(name: str, rows, label: str | None = None) -> str:
+    """Append one run's structured rows to ``BENCH_<name>.json``.
+
+    The file holds a list of runs (the trajectory); each entry is
+    ``{ts, git, label, rows}``. Corrupt/absent files start a fresh list.
+    """
+    path = os.path.join(_ROOT, f"BENCH_{name}.json")
+    history: list = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                history = json.load(f)
+            if not isinstance(history, list):
+                history = []
+        except (json.JSONDecodeError, OSError):
+            history = []
+    history.append({
+        "ts": datetime.datetime.now(datetime.timezone.utc)
+        .isoformat(timespec="seconds"),
+        "git": _git_rev(),
+        "label": label,
+        "rows": rows,
+    })
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(history, f, indent=1, default=str)
+    os.replace(tmp, path)
+    return path
 
 
 def main() -> None:
@@ -17,6 +67,10 @@ def main() -> None:
                     help="smaller datasets / fewer points")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip appending to BENCH_<name>.json")
+    ap.add_argument("--label", default=None,
+                    help="tag for the BENCH_<name>.json entry")
     args = ap.parse_args()
 
     from benchmarks import (bench_cached_backprop, bench_gnn_training,
@@ -51,7 +105,10 @@ def main() -> None:
         if only and name not in only:
             continue
         print(f"# --- {name} ---", flush=True)
-        fn()
+        rows = fn()
+        if rows and not args.no_json:
+            path = record_json(name, rows, label=args.label)
+            print(f"# wrote {os.path.relpath(path, _ROOT)}", flush=True)
     print(f"# total_wall_s={time.time() - t0:.1f}")
 
 

@@ -23,9 +23,10 @@ def main():
     # one-time tuning; measure=True times candidates on THIS machine
     # (the paper's "tune the library against a given dataset")
     g = isplib.build_cached_graph(ds.coo, k_hint=128, measure=True)
+    tile = (f"C={g.plan.sell_c}, sigma={g.plan.sell_sigma}"
+            if g.plan.wants_sell else f"br={g.plan.br}, bc={g.plan.bc}")
     print(f"autotuner picked: {g.plan.kind} "
-          f"(br={g.plan.br}, bc={g.plan.bc}, "
-          f"predicted speedup {g.plan.predicted_speedup:.2f}x)")
+          f"({tile}, predicted speedup {g.plan.predicted_speedup:.2f}x)")
 
     h = jnp.asarray(np.random.default_rng(0)
                     .standard_normal((ds.num_nodes, 128)).astype(np.float32))

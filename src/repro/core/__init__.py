@@ -6,8 +6,9 @@ Public surface (the paper's user API, §3.5–3.6):
     from repro.core import build_cached_graph, autotune, tuning_curve
     from repro.core import patch, unpatch, patched, patch_fn
 """
-from repro.core.sparse import (COO, CSR, BSR, ELL, coo_from_edges,
+from repro.core.sparse import (COO, CSR, BSR, ELL, SELL, coo_from_edges,
                                csr_from_coo, bsr_from_coo, ell_from_coo,
+                               sell_from_coo, sell_slice_degrees,
                                coo_transpose, gcn_normalize, row_degrees)
 from repro.core.semiring import Semiring, get_semiring
 from repro.core.autotune import (HardwareModel, KernelPlan, autotune,
@@ -24,8 +25,9 @@ from repro.core.patch import (patch, unpatch, patched, patch_fn, resolve,
 _ensure_defaults()
 
 __all__ = [
-    "COO", "CSR", "BSR", "ELL", "coo_from_edges", "csr_from_coo",
-    "bsr_from_coo", "ell_from_coo", "coo_transpose", "gcn_normalize",
+    "COO", "CSR", "BSR", "ELL", "SELL", "coo_from_edges", "csr_from_coo",
+    "bsr_from_coo", "ell_from_coo", "sell_from_coo", "sell_slice_degrees",
+    "coo_transpose", "gcn_normalize",
     "row_degrees", "Semiring", "get_semiring", "HardwareModel", "KernelPlan",
     "autotune", "tuning_curve", "suggest_embedding_size", "probe_hardware",
     "TuningDB", "CachedGraph", "build_cached_graph", "spmm", "matmul",

@@ -17,6 +17,11 @@ BSR   : block-sparse rows — *the* TPU-generated-kernel format. The adjacency
         This is the MXU analogue of iSpLib's register-blocked CSR kernels.
 ELL   : ELLPACK (row-padded neighbor lists) — VPU/gather kernel format for
         very sparse rows, and the format used by the distributed halo path.
+SELL  : SELL-C-σ (sliced ELLPACK) — rows sorted by degree within windows of
+        σ, packed into slices of C rows, each slice padded only to its OWN
+        max degree. Kills both ELL pathologies at once: global-max-degree
+        padding and the (1, K) one-sublane output tiles. The SpMM wrapper
+        inverts the row permutation on output.
 """
 from __future__ import annotations
 
@@ -35,10 +40,13 @@ __all__ = [
     "CSR",
     "BSR",
     "ELL",
+    "SELL",
     "coo_from_edges",
     "csr_from_coo",
     "bsr_from_coo",
     "ell_from_coo",
+    "sell_from_coo",
+    "sell_slice_degrees",
     "coo_transpose",
     "row_degrees",
     "gcn_normalize",
@@ -195,6 +203,68 @@ class ELL:
         return self.idx < self.ncols
 
 
+@partial(jax.tree_util.register_dataclass,
+         data_fields=["idx", "val", "slice_of", "first_step", "perm",
+                      "inv_perm"],
+         meta_fields=["nrows", "ncols", "nse", "c", "sigma", "nslices"])
+@dataclasses.dataclass(frozen=True)
+class SELL:
+    """SELL-C-σ: degree-sorted sliced ELLPACK (Kreutzer et al. layout).
+
+    Rows are sorted by descending degree within windows of ``sigma`` rows
+    (``sigma == 0`` means one global window), then grouped into slices of
+    ``c`` consecutive sorted rows; each slice is padded only to its own max
+    degree (min 1, so every output tile sees at least one zero-init step).
+
+    Storage is *degree-major packed*: packed step ``t`` holds the d-th
+    neighbor of all ``c`` rows of one slice, so ``idx``/``val`` have shape
+    ``(n_steps, c)`` with ``n_steps = Σ_s max_deg_s`` — the per-slice
+    padding savings are structural, not just skipped work. Pad slots carry
+    the ``idx == ncols`` sentinel and ``val == 0``.
+
+    ``slice_of[t]`` is the owning slice per step (monotonic — the kernel's
+    (c, K) accumulator tile stays VMEM-resident across a slice's steps);
+    ``first_step[t] == 1`` marks a slice's first step (zero-init point).
+    ``perm`` maps sorted position -> original row over the padded row range
+    (a permutation of ``arange(nslices * c)``; positions >= nrows are
+    degree-0 pad rows); ``inv_perm`` maps original row -> sorted position
+    and is what the SpMM wrapper applies to un-sort the output.
+    """
+
+    idx: Array         # (n_steps, c) int32; pad slots == ncols sentinel
+    val: Array         # (n_steps, c)
+    slice_of: Array    # (n_steps,) int32
+    first_step: Array  # (n_steps,) int32 (0/1)
+    perm: Array        # (nslices * c,) int32
+    inv_perm: Array    # (nrows,) int32
+    nrows: int
+    ncols: int
+    nse: int
+    c: int
+    sigma: int
+    nslices: int
+
+    @property
+    def n_steps(self) -> int:
+        return self.idx.shape[0]
+
+    @property
+    def nrows_padded(self) -> int:
+        return self.nslices * self.c
+
+    @property
+    def shape(self):
+        return (self.nrows, self.ncols)
+
+    def pad_mask(self) -> Array:
+        return self.idx < self.ncols
+
+    @property
+    def packing_efficiency(self) -> float:
+        """nse / stored slots — 1.0 means zero padding waste."""
+        return self.nse / max(self.n_steps * self.c, 1)
+
+
 # --------------------------------------------------------------------------
 # Host-side constructors (numpy; run once per graph — never inside jit)
 # --------------------------------------------------------------------------
@@ -288,11 +358,18 @@ def bsr_from_coo(a: COO, br: int = 128, bc: int = 128,
 
 
 def ell_from_coo(a: COO, max_deg: int | None = None) -> ELL:
+    """Degenerate cases are explicit: an empty graph (``nse == 0`` and/or
+    ``nrows == 0``) and a requested ``max_deg == 0`` both yield a single
+    all-sentinel column, so downstream kernels always see ``max_deg >= 1``
+    and zero-degree rows reduce to 0 via the sentinel zero-row trick."""
     row = np.asarray(a.row)[: a.nse]
     col = np.asarray(a.col)[: a.nse]
     val = np.asarray(a.val)[: a.nse]
     counts = np.bincount(row, minlength=a.nrows)
-    md = int(counts.max()) if max_deg is None else max_deg
+    if max_deg is None:
+        md = int(counts.max()) if counts.size else 0
+    else:
+        md = max_deg
     md = max(md, 1)
     idx = np.full((a.nrows, md), a.ncols, np.int32)   # sentinel
     v = np.zeros((a.nrows, md), val.dtype)
@@ -305,6 +382,76 @@ def ell_from_coo(a: COO, max_deg: int | None = None) -> ELL:
     v[row[keep], slot[keep]] = val[keep]
     return ELL(idx=jnp.asarray(idx), val=jnp.asarray(v),
                nrows=a.nrows, ncols=a.ncols, nse=a.nse)
+
+
+def sell_slice_degrees(degrees: np.ndarray, c: int, sigma: int = 0
+                       ) -> tuple[np.ndarray, np.ndarray]:
+    """Window-sort rows by degree and compute per-slice max degrees.
+
+    Shared by :func:`sell_from_coo` and the autotuner's cost model so the
+    packed-step count both see is identical. ``sigma == 0`` sorts globally;
+    otherwise sigma is rounded up to a multiple of ``c`` so slices never
+    straddle a sort window. Returns ``(slice_deg, perm)`` where ``perm`` is
+    a permutation of ``arange(nrows_padded)`` (sorted position -> original
+    row; padded virtual rows have degree 0) and ``slice_deg`` (>= 1
+    elementwise) is the per-slice padded width.
+    """
+    assert c >= 1, c
+    n = int(degrees.shape[0])
+    nrows_p = max(_round_up(n, c), c)
+    d = np.zeros(nrows_p, np.int64)
+    d[:n] = degrees
+    sig = nrows_p if sigma == 0 else min(_round_up(max(int(sigma), 1), c),
+                                         nrows_p)
+    perm = np.concatenate([
+        lo + np.argsort(-d[lo: lo + sig], kind="stable")
+        for lo in range(0, nrows_p, sig)
+    ])
+    slice_deg = d[perm].reshape(-1, c).max(axis=1)
+    return np.maximum(slice_deg, 1), perm
+
+
+def sell_from_coo(a: COO, c: int = 8, sigma: int = 0) -> SELL:
+    """Pack a COO matrix into SELL-C-σ (host-side, once per graph).
+
+    ``c`` is the slice height (kernel sublane tile); ``sigma`` the sort
+    window (0 = global sort, best packing; smaller windows trade padding
+    for locality of the row permutation)."""
+    row = np.asarray(a.row)[: a.nse]
+    col = np.asarray(a.col)[: a.nse]
+    val = np.asarray(a.val)[: a.nse]
+    counts = np.bincount(row, minlength=a.nrows) if a.nrows else \
+        np.zeros(0, np.int64)
+    slice_deg, perm = sell_slice_degrees(counts, c, sigma)
+    nslices = slice_deg.shape[0]
+    nrows_p = nslices * c
+    inv = np.empty(nrows_p, np.int64)
+    inv[perm] = np.arange(nrows_p)
+
+    sptr = np.concatenate([[0], np.cumsum(slice_deg)])
+    n_steps = int(sptr[-1])
+    idx = np.full((n_steps, c), a.ncols, np.int32)
+    v = np.zeros((n_steps, c), val.dtype if val.size else np.float32)
+    if row.size:
+        order = np.lexsort((col, row))
+        row, col, val = row[order], col[order], val[order]
+        # slot within row (edges are row-sorted)
+        slot = np.arange(len(row)) - np.repeat(np.cumsum(counts) - counts,
+                                               counts)
+        spos = inv[row]                      # sorted position of each edge's row
+        step = sptr[spos // c] + slot        # packed step; slot < slice_deg
+        idx[step, spos % c] = col
+        v[step, spos % c] = val
+    first = np.zeros(n_steps, np.int32)
+    first[sptr[:-1]] = 1
+    return SELL(idx=jnp.asarray(idx), val=jnp.asarray(v),
+                slice_of=jnp.asarray(np.repeat(np.arange(nslices), slice_deg),
+                                     jnp.int32),
+                first_step=jnp.asarray(first),
+                perm=jnp.asarray(perm, jnp.int32),
+                inv_perm=jnp.asarray(inv[: a.nrows], jnp.int32),
+                nrows=a.nrows, ncols=a.ncols, nse=a.nse,
+                c=c, sigma=sigma, nslices=nslices)
 
 
 # --------------------------------------------------------------------------

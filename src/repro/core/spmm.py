@@ -47,18 +47,37 @@ def _generated_ok(g: CachedGraph, sr: Semiring, k: int) -> bool:
             and sr.mxu_eligible and _lane_aligned(k))
 
 
+def _sell_ok(g: CachedGraph, sr: Semiring) -> bool:
+    # SELL is a gather kernel: any K works (the Pallas wrapper lane-pads),
+    # but the semiring rule is the paper's — sum only, mean via post-scale.
+    return g.plan.wants_sell and g.sell is not None and sr.mxu_eligible
+
+
+def _ell_ok(g: CachedGraph, sr: Semiring) -> bool:
+    return g.plan.wants_ell and g.ell is not None and sr.mxu_eligible
+
+
 def _forward(g: CachedGraph, h: Array, sr: Semiring, transposed: bool) -> Array:
-    """One SpMM against A (or the *cached* A^T when ``transposed``)."""
+    """One SpMM against A (or the *cached* A^T when ``transposed``).
+
+    Generated kernels (BSR / SELL / ELL, per the plan) compute the sum
+    semiring; the shared epilogue applies the cached inverse-degree
+    post-scale for mean. Everything else takes the trusted path."""
     coo = g.coo_t if transposed else g.coo
     if _generated_ok(g, sr, h.shape[-1]):
         bsr = g.bsr_t if transposed else g.bsr
         out = kops.bsr_spmm(bsr, h, fk=g.plan.fk)[: coo.nrows]
-        if sr.reduce == "mean":
-            inv = g.inv_deg_t if transposed else g.inv_deg
-            out = out * inv[:, None]
-        return out.astype(h.dtype)
-    deg = g.degrees_t if transposed else g.degrees
-    return spmm_coo_ref(coo, h, sr, degrees=deg)
+    elif _sell_ok(g, sr):
+        out = kops.sell_spmm(g.sell_t if transposed else g.sell, h)
+    elif _ell_ok(g, sr):
+        out = kops.ell_spmm(g.ell_t if transposed else g.ell, h)
+    else:
+        deg = g.degrees_t if transposed else g.degrees
+        return spmm_coo_ref(coo, h, sr, degrees=deg)
+    if sr.reduce == "mean":
+        inv = g.inv_deg_t if transposed else g.inv_deg
+        out = out * inv[:, None]
+    return out.astype(h.dtype)
 
 
 def _raw_reduce(g: CachedGraph, h: Array, sr: Semiring) -> Array:

@@ -14,13 +14,16 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.sparse import BSR, COO, ELL
+from repro.core.sparse import BSR, COO, ELL, SELL
 
 __all__ = [
     "on_tpu",
     "bsr_spmm",
     "bsr_spmm_xla",
     "ell_spmm",
+    "sell_spmm",
+    "sell_spmm_xla",
+    "sell_packed_reduce",
     "sddmm_bsr",
     "fusedmm_bsr",
     "ragged_gemm",
@@ -79,6 +82,47 @@ def ell_spmm(a: ELL, h: jnp.ndarray, *, interpret: bool | None = None
     from repro.kernels.ref import spmm_ell_ref
     from repro.core.semiring import get_semiring
     return spmm_ell_ref(a, h, get_semiring("sum"))
+
+
+# --------------------------------------------------------------------------
+# SELL SpMM — sliced degree-sorted gather kernel (sum semiring)
+# --------------------------------------------------------------------------
+
+def sell_packed_reduce(idx: jnp.ndarray, val: jnp.ndarray,
+                       slice_of: jnp.ndarray, nslices: int,
+                       inv_perm: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """The packed-slice SELL reduction on raw arrays: gather the
+    (n_steps, C) neighbor table, one fused segment-sum over slices,
+    inverse-permute rows. Shared by :func:`sell_spmm_xla` and the
+    distributed per-band body (dist/gnn.py) so the algorithm lives once.
+    The gather tensor is O(n_steps · C · K) — the per-slice padding savings
+    that make SELL beat the ELL path carry over to the CPU proxy unchanged.
+    Sentinel slots (idx out of range) gather 0 via mode='fill' and carry
+    val == 0, so they are doubly inert."""
+    c = idx.shape[1]
+    gathered = jnp.take(h, idx, axis=0, mode="fill",
+                        fill_value=0)                       # (S, C, K)
+    msgs = val[..., None].astype(gathered.dtype) * gathered
+    acc = jax.ops.segment_sum(msgs, slice_of,
+                              num_segments=nslices)         # (nslices, C, K)
+    return acc.reshape(nslices * c, h.shape[1])[inv_perm]
+
+
+def sell_spmm_xla(a: SELL, h: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized XLA path with the same packed-slice algorithm as the
+    Pallas kernel (see :func:`sell_packed_reduce`)."""
+    out = sell_packed_reduce(a.idx, a.val, a.slice_of, a.nslices,
+                             a.inv_perm, h)
+    return out.astype(h.dtype)
+
+
+def sell_spmm(a: SELL, h: jnp.ndarray, *, interpret: bool | None = None
+              ) -> jnp.ndarray:
+    use_pallas = on_tpu() if interpret is None else True
+    if use_pallas:
+        from repro.kernels.sell_spmm import sell_spmm_pallas
+        return sell_spmm_pallas(a, h, interpret=bool(interpret))
+    return sell_spmm_xla(a, h)
 
 
 # --------------------------------------------------------------------------

@@ -18,7 +18,7 @@ from typing import Any, Optional
 import jax
 
 from repro.core import sparse as sp
-from repro.core.autotune import KernelPlan
+from repro.core.autotune import KernelPlan, TuningDB
 from repro.core.cache import CachedGraph, build_cached_graph
 
 __all__ = ["GraphBundle", "build_bundle"]
@@ -41,14 +41,17 @@ class GraphBundle:
 
 def build_bundle(dataset, *, k_hint: int = 128, tune: bool = True,
                  measure: bool = False,
-                 plan: Optional[KernelPlan] = None) -> GraphBundle:
-    """One-time host-side preprocessing for a GraphDataset."""
+                 plan: Optional[KernelPlan] = None,
+                 db: Optional[TuningDB] = None) -> GraphBundle:
+    """One-time host-side preprocessing for a GraphDataset. ``db`` persists
+    the tuner's (possibly measured) decisions across runs — §3.2's
+    one-time-tuning amortization on the actual training path."""
     a_norm = sp.gcn_normalize(dataset.coo, add_self_loops=True)
     return GraphBundle(
         tuned=build_cached_graph(dataset.coo, k_hint=k_hint, tune=tune,
-                                 measure=measure, plan=plan),
+                                 measure=measure, plan=plan, db=db),
         tuned_norm=build_cached_graph(a_norm, k_hint=k_hint, tune=tune,
-                                      measure=measure, plan=plan),
+                                      measure=measure, plan=plan, db=db),
         raw=dataset.coo,
         raw_sl=dataset.coo_sl,
     )

@@ -60,12 +60,14 @@ def train_gnn(arch: str, dataset, *, hidden: int = 128, epochs: int = 30,
               lr: float = 1e-2, weight_decay: float = 5e-4,
               use_isplib: bool = True, tune: bool = True,
               measure_tuning: bool = False, seed: int = 0,
-              bundle=None) -> GNNTrainResult:
-    """Train a 2-layer GNN on ``dataset`` (a data.graphs.GraphDataset)."""
+              bundle=None, tuning_db=None) -> GNNTrainResult:
+    """Train a 2-layer GNN on ``dataset`` (a data.graphs.GraphDataset).
+    ``tuning_db`` (a repro.core.TuningDB) skips re-measuring plans this
+    machine has already tuned for this graph structure."""
     with patched(use_isplib):
         if bundle is None:
             bundle = build_bundle(dataset, k_hint=hidden, tune=tune,
-                                  measure=measure_tuning)
+                                  measure=measure_tuning, db=tuning_db)
         init, apply = make_gnn(arch, dataset.num_features, hidden,
                                dataset.num_classes)
         params = init(jax.random.PRNGKey(seed))

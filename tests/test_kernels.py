@@ -49,6 +49,66 @@ def test_ell_spmm_sweep(rng, k, max_deg_cap):
                                atol=1e-4)
 
 
+@pytest.mark.parametrize("c,sigma", [(8, 0), (8, 16), (16, 0), (32, 0)])
+@pytest.mark.parametrize("k", [32, 128])
+def test_sell_spmm_sweep(rng, c, sigma, k):
+    """Interpret-mode Pallas body vs the COO oracle — exercises the packed
+    layout, the per-slice zero-init, and the inverse row permutation."""
+    coo, dense = random_coo(rng, 60, 50, 300)
+    sell = C.sell_from_coo(coo, c=c, sigma=sigma)
+    h = jnp.asarray(rng.standard_normal((50, k)).astype(np.float32))
+    out = kops.sell_spmm(sell, h, interpret=True)
+    ref = np.asarray(dense) @ np.asarray(h)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-4)
+    # and the XLA dispatch path (what CPU serves)
+    out_xla = kops.sell_spmm(sell, h, interpret=None)
+    np.testing.assert_allclose(np.asarray(out_xla), ref, rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_sell_spmm_skewed_degrees(rng):
+    """Power-law-ish rows (one hub row + sparse tail): the exact regime
+    where ELL max-degree padding explodes; SELL numerics must be exact."""
+    n, m = 64, 64
+    src = np.concatenate([rng.integers(0, m, 60),          # hub row 0
+                          rng.integers(0, m, 40)])
+    dst = np.concatenate([np.zeros(60, np.int64),
+                          rng.integers(1, n, 40)])
+    uniq = np.unique(np.stack([dst, src], 1), axis=0)
+    dst, src = uniq[:, 0], uniq[:, 1]
+    val = rng.standard_normal(len(dst)).astype(np.float32)
+    coo = C.coo_from_edges(src, dst, val, n, m)
+    dense = np.zeros((n, m), np.float32)
+    dense[dst, src] = val
+    sell = C.sell_from_coo(coo, c=8)
+    # packed slots must be far below the ELL footprint nrows * max_deg
+    max_deg = int((dense != 0).sum(1).max())
+    assert sell.n_steps * sell.c < n * max_deg / 4
+    h = jnp.asarray(rng.standard_normal((m, 128)).astype(np.float32))
+    out = kops.sell_spmm(sell, h, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), dense @ np.asarray(h),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sell_spmm_zero_degree_rows_and_empty(rng):
+    # zero-degree rows must come back exactly 0 after the inverse perm
+    coo = C.coo_from_edges(np.array([1, 2]), np.array([3, 3]),
+                           np.array([2.0, 3.0], np.float32), 6, 6)
+    sell = C.sell_from_coo(coo, c=4)
+    h = jnp.asarray(np.eye(6, dtype=np.float32))
+    out = np.asarray(kops.sell_spmm(sell, h, interpret=True))
+    assert (out[[0, 1, 2, 4, 5]] == 0).all()
+    assert out[3, 1] == 2.0 and out[3, 2] == 3.0
+    # empty graph: every slice still has its >= 1 zero-init step
+    empty = C.coo_from_edges(np.zeros(0, np.int64), np.zeros(0, np.int64),
+                             None, 5, 5, pad_to=0)
+    sell_e = C.sell_from_coo(empty, c=8)
+    out_e = kops.sell_spmm(sell_e, jnp.ones((5, 8), jnp.float32),
+                           interpret=True)
+    assert np.asarray(out_e).shape == (5, 8)
+    assert (np.asarray(out_e) == 0).all()
+
+
 @pytest.mark.parametrize("d", [16, 64, 130])
 @pytest.mark.parametrize("scale_by_a", [True, False])
 def test_sddmm_sweep(rng, d, scale_by_a):

@@ -171,6 +171,30 @@ def test_distributed_spmm_matches_local():
     """)
 
 
+def test_distributed_spmm_sell_matches_local():
+    _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import coo_from_edges
+    from repro.core.autotune import KernelPlan
+    from repro.dist.gnn import build_dist_graph, distributed_spmm
+    mesh = jax.make_mesh((4,), ('data',))
+    rng = np.random.default_rng(0)
+    N, K, NNZ = 64, 16, 500
+    lin = rng.choice(N * N, size=NNZ, replace=False)
+    dst, src = lin // N, lin % N
+    val = rng.standard_normal(NNZ).astype(np.float32)
+    a = coo_from_edges(src, dst, val, N, N)
+    g = build_dist_graph(a, 4, plan=KernelPlan(kind='sell', sell_c=8))
+    assert g.kind == 'sell'
+    h = jnp.asarray(rng.standard_normal((N, K)), jnp.float32)
+    with mesh:
+        out = jax.jit(lambda hh: distributed_spmm(g, hh, mesh))(h)
+    dense = np.zeros((N, N), np.float32); dense[dst, src] = val
+    err = float(jnp.abs(out - dense @ np.asarray(h)).max())
+    assert err < 1e-4, err
+    """)
+
+
 def test_ring_allgather_matmul():
     _run("""
     import jax, jax.numpy as jnp, numpy as np

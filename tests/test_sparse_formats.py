@@ -11,7 +11,7 @@ except ImportError:     # fall back to the deterministic sampling stub
 
 from repro.core import (bsr_from_coo, coo_from_edges, coo_transpose,
                         csr_from_coo, ell_from_coo, gcn_normalize,
-                        row_degrees)
+                        row_degrees, sell_from_coo, sell_slice_degrees)
 from conftest import random_coo
 
 
@@ -53,6 +53,86 @@ def test_ell_roundtrip(small_graph):
             if idx[i, j] < coo.ncols:
                 d[i, idx[i, j]] += val[i, j]
     np.testing.assert_allclose(d, dense, rtol=1e-6)
+
+
+@pytest.mark.parametrize("c,sigma", [(4, 0), (8, 0), (8, 16)])
+def test_sell_roundtrip(small_graph, c, sigma):
+    """Unpacking the SELL slices through perm must reproduce the dense
+    matrix; perm/inv_perm must be mutually inverse; slices sorted."""
+    coo, dense = small_graph
+    s = sell_from_coo(coo, c=c, sigma=sigma)
+    idx, val = np.asarray(s.idx), np.asarray(s.val)
+    sof, perm = np.asarray(s.slice_of), np.asarray(s.perm)
+    d_sorted = np.zeros((s.nrows_padded, coo.ncols), np.float32)
+    for t in range(s.n_steps):
+        for lane in range(c):
+            if idx[t, lane] < coo.ncols:
+                d_sorted[sof[t] * c + lane, idx[t, lane]] += val[t, lane]
+    d = np.zeros_like(d_sorted)
+    d[perm] = d_sorted
+    np.testing.assert_allclose(d[: coo.nrows], dense, rtol=1e-6)
+    # perm is a permutation of the padded row range, inverse-consistent
+    assert sorted(perm.tolist()) == list(range(s.nrows_padded))
+    inv = np.asarray(s.inv_perm)
+    assert (perm[inv] == np.arange(coo.nrows)).all()
+    # steps are slice-monotonic and each slice starts with first_step == 1
+    assert (np.diff(sof) >= 0).all()
+    first = np.asarray(s.first_step)
+    assert first[0] == 1
+    assert (first[np.searchsorted(sof, np.arange(s.nslices))] == 1).all()
+
+
+def test_sell_packing_beats_ell_on_skew(rng):
+    """One hub row must not inflate every slice (the ELL pathology)."""
+    n = 64
+    src = rng.integers(0, n, 50)
+    coo = coo_from_edges(np.unique(src), np.zeros(len(np.unique(src)),
+                                                  np.int64), None, n, n)
+    s = sell_from_coo(coo, c=8, sigma=0)
+    ell = ell_from_coo(coo)
+    assert s.n_steps * s.c < ell.nrows * ell.max_deg / 4
+
+
+def test_sell_slice_degrees_windows():
+    deg = np.array([9, 0, 0, 0, 5, 0, 0, 0])
+    # global sort: both high-degree rows land in the same slice
+    sd, perm = sell_slice_degrees(deg, c=4, sigma=0)
+    assert sd.tolist() == [9, 1]
+    assert perm[0] == 0 and perm[1] == 4
+    # sigma=4 restricts sorting to each window: one hub per slice
+    sd_w, _ = sell_slice_degrees(deg, c=4, sigma=4)
+    assert sd_w.tolist() == [9, 5]
+
+
+def test_ell_degenerate_zero_degree_rows(rng):
+    # rows 0/2/4 have no neighbors: sentinel-only rows, spmm yields zeros
+    coo = coo_from_edges(np.array([1, 1]), np.array([1, 3]),
+                         np.array([1.5, -2.0], np.float32), 5, 5)
+    ell = ell_from_coo(coo)
+    idx = np.asarray(ell.idx)
+    assert (idx[[0, 2, 4]] == coo.ncols).all()
+    from repro.core.semiring import get_semiring
+    from repro.kernels.ref import spmm_ell_ref
+    h = jnp.asarray(np.eye(5, dtype=np.float32))
+    out = np.asarray(spmm_ell_ref(ell, h, get_semiring("sum")))
+    assert (out[[0, 2, 4]] == 0).all()
+    assert out[1, 1] == 1.5 and out[3, 1] == -2.0
+
+
+def test_ell_degenerate_empty_graph_and_zero_max_deg():
+    empty = coo_from_edges(np.zeros(0, np.int64), np.zeros(0, np.int64),
+                           None, 4, 4, pad_to=0)
+    ell = ell_from_coo(empty)
+    assert ell.max_deg == 1                 # guarded: never a 0-width table
+    assert (np.asarray(ell.idx) == empty.ncols).all()
+    # explicit max_deg=0 request is clamped the same way
+    ell0 = ell_from_coo(empty, max_deg=0)
+    assert ell0.max_deg == 1
+    # zero-row matrix must not crash the constructor
+    norows = coo_from_edges(np.zeros(0, np.int64), np.zeros(0, np.int64),
+                            None, 0, 4, pad_to=0)
+    ell_nr = ell_from_coo(norows)
+    assert np.asarray(ell_nr.idx).shape == (0, 1)
 
 
 def test_transpose(small_graph):

@@ -91,6 +91,71 @@ def test_generated_vs_trusted_paths_identical(rng):
                                rtol=1e-3, atol=1e-3)
 
 
+def test_sell_vs_trusted_paths_identical(rng):
+    """The SELL-C-σ path and the forced-trusted path must agree for sum and
+    mean, forward and backward (the cached-transpose SELL in the bwd)."""
+    from repro.core.autotune import KernelPlan
+    coo, dense = random_coo(rng, 100, 90, 800)
+    h = jnp.asarray(rng.standard_normal((90, 128)).astype(np.float32))
+    g_sell = C.build_cached_graph(
+        coo, k_hint=128, plan=KernelPlan(kind="sell", sell_c=8, sell_sigma=0))
+    g_tru = C.build_cached_graph(coo, k_hint=128, plan=KernelPlan.trusted())
+    assert g_sell.plan.wants_sell and g_sell.sell is not None
+    assert g_sell.sell_t is not None
+    for red in ("sum", "mean"):
+        out_s = C.spmm(g_sell, h, reduce=red)
+        out_t = C.spmm(g_tru, h, reduce=red)
+        np.testing.assert_allclose(np.asarray(out_s), np.asarray(out_t),
+                                   rtol=1e-4, atol=1e-4)
+        gs = jax.grad(lambda x: jnp.sum(C.spmm(g_sell, x, red) ** 2))(h)
+        gt = jax.grad(lambda x: jnp.sum(C.spmm(g_tru, x, red) ** 2))(h)
+        np.testing.assert_allclose(np.asarray(gs), np.asarray(gt),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_ell_plan_dispatches(rng):
+    """A measured-ELL plan (possible on near-regular graphs) must actually
+    dispatch through the ELL kernel path, not silently fall back to
+    trusted — g.ell is built and the numerics agree fwd+bwd."""
+    from repro.core.autotune import KernelPlan
+    coo, dense = random_coo(rng, 80, 70, 400)
+    h = jnp.asarray(rng.standard_normal((70, 64)).astype(np.float32))
+    g_ell = C.build_cached_graph(coo, k_hint=64,
+                                 plan=KernelPlan(kind="ell"))
+    assert g_ell.plan.wants_ell and g_ell.ell is not None
+    assert g_ell.ell_t is not None
+    g_tru = C.build_cached_graph(coo, k_hint=64, plan=KernelPlan.trusted())
+    for red in ("sum", "mean"):
+        out_e = C.spmm(g_ell, h, reduce=red)
+        out_t = C.spmm(g_tru, h, reduce=red)
+        np.testing.assert_allclose(np.asarray(out_e), np.asarray(out_t),
+                                   rtol=1e-4, atol=1e-4)
+        ge = jax.grad(lambda x: jnp.sum(C.spmm(g_ell, x, red) ** 2))(h)
+        gt = jax.grad(lambda x: jnp.sum(C.spmm(g_tru, x, red) ** 2))(h)
+        np.testing.assert_allclose(np.asarray(ge), np.asarray(gt),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_autotuned_sell_dispatch(rng):
+    """On a low-degree-variance sparse graph the tuner selects SELL and the
+    spmm actually dispatches through it (g.sell is built and used)."""
+    coo, _ = random_coo(rng, 4096, 4096, 5000)
+    g = C.build_cached_graph(coo, k_hint=128)
+    assert g.plan.kind == "sell", g.plan
+    assert g.sell is not None and g.sell_t is not None
+    h = jnp.asarray(rng.standard_normal((4096, 128)).astype(np.float32))
+    out = C.spmm(g, h)
+    from repro.kernels.ref import spmm_coo_ref
+    ref = spmm_coo_ref(coo, h, C.get_semiring("sum"))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4,
+                               atol=1e-4)
+    # non-eligible semirings still take the trusted path on the same graph
+    out_max = C.spmm(g, h, reduce="max")
+    ref_max = spmm_coo_ref(coo, h, C.get_semiring("max"), degrees=g.degrees)
+    np.testing.assert_allclose(np.asarray(out_max), np.asarray(ref_max),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_baselines_match_tuned(rng):
     g, dense, h = _setup(rng)
     for red in ("sum", "mean"):
