@@ -73,9 +73,9 @@ def main() -> None:
                     help="tag for the BENCH_<name>.json entry")
     args = ap.parse_args()
 
-    from benchmarks import (bench_cached_backprop, bench_gnn_training,
-                            bench_kernels, bench_lm_step, bench_moe_dispatch,
-                            bench_tuning_curve)
+    from benchmarks import (bench_cached_backprop, bench_dist2d,
+                            bench_gnn_training, bench_kernels, bench_lm_step,
+                            bench_moe_dispatch, bench_tuning_curve)
 
     scale = 1 / 256 if args.fast else 1 / 64
     benches = {
@@ -92,6 +92,9 @@ def main() -> None:
             datasets=("reddit",) if args.fast else
             ("reddit", "ogbn-products"), scale=scale),
         "kernels": lambda: bench_kernels.run(scale=scale),
+        "dist2d": lambda: bench_dist2d.run(
+            n=1024 if args.fast else 4096,
+            nnz=20_000 if args.fast else 200_000),
         "moe_dispatch": lambda: bench_moe_dispatch.run(
             t=2048 if args.fast else 8192),
         "lm_step": lambda: bench_lm_step.run(

@@ -476,6 +476,9 @@ def tuning_curve(a, ks: Sequence[int] = (16, 32, 64, 128, 256, 512, 1024),
 
 
 def suggest_embedding_size(curve: list[dict]) -> int:
+    """The K with the best generated-vs-trusted speedup on a
+    :func:`tuning_curve` sweep — the paper's "ideal embedding size" (§3.2,
+    hardware-dependent: 32 on the paper's Intel box, 64 on AMD)."""
     return max(curve, key=lambda r: r["speedup"])["k"]
 
 
@@ -521,13 +524,18 @@ class TuningDB:
         return f"{a.nrows}x{a.ncols}nse{a.nse}fp{fp:08x}k{k}"
 
     def get(self, a, k: int) -> KernelPlan | None:
+        """Previously persisted plan for (graph ``a``, width ``k``), or
+        None — a miss means the caller should run the sweep and ``put``."""
         d = self._db.get(self.key(a, k))
         return KernelPlan.from_json(d) if d else None
 
     def put(self, a, k: int, plan: KernelPlan) -> None:
+        """Record a tuner decision in memory; ``save()`` persists it."""
         self._db[self.key(a, k)] = plan.to_json()
 
     def save(self) -> None:
+        """Atomically write the DB to ``self.path`` (tmp file + rename, so
+        a crashed run never leaves a half-written store behind)."""
         tmp = self.path + ".tmp"
         with open(tmp, "w") as f:
             json.dump(self._db, f, indent=1)

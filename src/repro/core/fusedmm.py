@@ -22,7 +22,37 @@ from repro.kernels.ref import fusedmm_coo_ref
 
 Array = Any
 
-__all__ = ["fusedmm"]
+__all__ = ["fusedmm", "edge_weights"]
+
+
+def edge_weights(s: Array, row_ids: Array, nrows: int, valid: Array,
+                 edge_op: str, *, axis_name: str | None = None) -> Array:
+    """Per-edge weights f(s) for a FusedMM edge op, zero on invalid slots.
+
+    ``s``/``row_ids``/``valid`` are flat per-edge arrays; softmax normalizes
+    over each row's neighborhood via segment ops. ``axis_name`` handles the
+    2-D vertex-cut case (dist/gnn2d.py) where a row's neighborhood is split
+    across a mesh axis: the row-wise max and sum then reduce over that axis
+    (pmax/psum), giving the exact global softmax from per-tile pieces. The
+    max is gradient-stopped — softmax is shift-invariant, so the derivative
+    is exact and the non-differentiable pmax never enters AD.
+    """
+    if edge_op == "softmax":
+        neg = jnp.asarray(-jnp.inf, s.dtype)
+        sm = jnp.where(valid, s, neg)
+        m = jax.ops.segment_max(jax.lax.stop_gradient(sm), row_ids,
+                                num_segments=nrows)
+        if axis_name is not None:
+            m = jax.lax.pmax(m, axis_name)
+        m = jnp.where(jnp.isinf(m), 0.0, m)
+        e = jnp.where(valid, jnp.exp(sm - m[row_ids]), 0.0)
+        z = jax.ops.segment_sum(e, row_ids, num_segments=nrows)
+        if axis_name is not None:
+            z = jax.lax.psum(z, axis_name)
+        return e / jnp.maximum(z, 1e-30)[row_ids]
+    if edge_op == "sigmoid":
+        return jnp.where(valid, jax.nn.sigmoid(s), 0.0)
+    return jnp.where(valid, s, 0.0)
 
 
 def _use_fused_kernel(g: CachedGraph, k: int) -> bool:
@@ -48,27 +78,17 @@ def _bwd(edge_op, res, dout):
     coo = g.coo
     valid = coo.valid_mask()
     s = jnp.sum(x[coo.row] * y[coo.col], axis=-1)               # recompute
+    w = edge_weights(s, coo.row, coo.nrows, valid, edge_op)
+    # dL/dw_e = dout[row_e]·h[col_e]; then the edge op's jacobian
+    dw = jnp.sum(dout[coo.row] * h[coo.col], axis=-1)
     if edge_op == "softmax":
-        neg = jnp.asarray(-jnp.inf, s.dtype)
-        sm = jnp.where(valid, s, neg)
-        m = jax.ops.segment_max(sm, coo.row, num_segments=coo.nrows)
-        m = jnp.where(jnp.isinf(m), 0.0, m)
-        e = jnp.where(valid, jnp.exp(sm - m[coo.row]), 0.0)
-        z = jnp.maximum(jax.ops.segment_sum(e, coo.row, coo.nrows), 1e-30)
-        w = e / z[coo.row]
-        # dL/dw_e = dout[row_e]·h[col_e]; softmax jacobian per row
-        dw = jnp.sum(dout[coo.row] * h[coo.col], axis=-1)
         wd = w * dw
         srow = jax.ops.segment_sum(wd, coo.row, coo.nrows)
         ds = wd - w * srow[coo.row]
     elif edge_op == "sigmoid":
-        w = jnp.where(valid, jax.nn.sigmoid(s), 0.0)
-        dw = jnp.sum(dout[coo.row] * h[coo.col], axis=-1)
         ds = jnp.where(valid, dw * w * (1.0 - w), 0.0)
     else:  # 'none'
-        w = jnp.where(valid, s, 0.0)
-        ds = jnp.where(valid,
-                       jnp.sum(dout[coo.row] * h[coo.col], axis=-1), 0.0)
+        ds = jnp.where(valid, dw, 0.0)
 
     dh = jax.ops.segment_sum(w[:, None] * dout[coo.row], coo.col,
                              num_segments=coo.ncols)

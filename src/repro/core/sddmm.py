@@ -18,7 +18,23 @@ from repro.kernels.ref import sddmm_coo_ref
 
 Array = Any
 
-__all__ = ["sddmm"]
+__all__ = ["sddmm", "masked_edge_scores"]
+
+
+def masked_edge_scores(xs: Array, ys: Array, valid: Array,
+                       scale: Array | None = None) -> Array:
+    """Slot-wise sampled dot products: ``sum(xs * ys, -1)``, invalid slots
+    zeroed, optionally scaled by A's values.
+
+    ``xs``/``ys`` broadcast against each other, so one definition serves
+    both the flat per-edge layout (``(nnz, D)`` each) and the 2-D tile
+    layouts of dist/gnn2d.py (``(rows, 1, D)`` row features against
+    ``(rows, max_deg, D)`` gathered neighbors, or ``(steps, C, D)`` pairs
+    for SELL tiles)."""
+    s = jnp.sum(xs * ys, axis=-1)
+    if scale is not None:
+        s = s * scale
+    return jnp.where(valid, s, 0)
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(3,))

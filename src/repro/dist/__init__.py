@@ -27,9 +27,11 @@ Modules:
   ``NamedSharding`` builders
 * :mod:`~repro.dist.mesh`        production/test mesh constructors
 * :mod:`~repro.dist.collectives` ``compressed_psum`` (int8 cross-pod
-  gradient reduce), ``ring_allgather_matmul``
+  gradient reduce), ``compressed_psum_scatter``, ``ring_allgather_matmul``
 * :mod:`~repro.dist.gnn`         1-D row-partitioned graphs + halo'd
   distributed SpMM
+* :mod:`~repro.dist.gnn2d`       2-D vertex-cut tile grid: O(N/sqrt(P))
+  distributed SpMM + SDDMM + FusedMM
 * :mod:`~repro.dist.pipeline`    GPipe-style microbatch pipeline
 """
 from __future__ import annotations
@@ -58,24 +60,33 @@ def shard_map(f, *, mesh, in_specs, out_specs, check_rep: bool = True):
 if not hasattr(jax, "shard_map"):
     jax.shard_map = shard_map
 
-from repro.dist.collectives import compressed_psum, ring_allgather_matmul
-from repro.dist.gnn import DistGraph, build_dist_graph, distributed_spmm
-from repro.dist.mesh import make_local_mesh, make_production_mesh
+from repro.dist.collectives import (compressed_psum, compressed_psum_scatter,
+                                    ring_allgather_matmul)
+from repro.dist.gnn import (DistGraph, build_dist_graph, comm_volume,
+                            distributed_spmm)
+from repro.dist.gnn2d import (Graph2D, comm_volume_2d, distributed_fusedmm_2d,
+                              distributed_sddmm_2d, distributed_spmm_2d,
+                              partition_2d, scores_to_dense)
+from repro.dist.mesh import (make_grid_mesh, make_local_mesh,
+                             make_production_mesh)
 from repro.dist.partition import (LM_RULES, batch_shardings, cache_shardings,
                                   param_logical_axes, param_shardings,
                                   state_shardings)
 from repro.dist.pipeline import pipeline_apply
 from repro.dist.sharding import (Rules, _current_mesh, current_rules,
-                                 resolve_spec, shard_constraint, use_rules)
+                                 grid_axes, resolve_spec, shard_constraint,
+                                 use_rules)
 
 __all__ = [
     "shard_map",
-    "compressed_psum", "ring_allgather_matmul",
-    "DistGraph", "build_dist_graph", "distributed_spmm",
-    "make_local_mesh", "make_production_mesh",
+    "compressed_psum", "compressed_psum_scatter", "ring_allgather_matmul",
+    "DistGraph", "build_dist_graph", "distributed_spmm", "comm_volume",
+    "Graph2D", "partition_2d", "distributed_spmm_2d", "distributed_sddmm_2d",
+    "distributed_fusedmm_2d", "scores_to_dense", "comm_volume_2d",
+    "make_grid_mesh", "make_local_mesh", "make_production_mesh",
     "LM_RULES", "batch_shardings", "cache_shardings", "param_logical_axes",
     "param_shardings", "state_shardings",
     "pipeline_apply",
-    "Rules", "current_rules", "resolve_spec", "shard_constraint",
-    "use_rules", "_current_mesh",
+    "Rules", "current_rules", "grid_axes", "resolve_spec",
+    "shard_constraint", "use_rules", "_current_mesh",
 ]

@@ -1,8 +1,11 @@
 """Distributed GNN message passing: 1-D row partition + halo'd banded SpMM.
 
-The adjacency is split into ``num_parts`` contiguous row bands (DGL-style
-1-D vertex-cut is future work — see ROADMAP); each band's layout now
-follows the *kernel plan* instead of hard-coding ELLPACK:
+The adjacency is split into ``num_parts`` contiguous row bands; the 2-D
+vertex-cut generalization (tile grid, O(N/sqrt(P)) communication, SDDMM /
+FusedMM paths) lives in :mod:`repro.dist.gnn2d` — this module remains the
+simpler 1-D path, the right choice on small meshes where one fused
+all-gather beats two grid collectives. Each band's layout follows the
+*kernel plan* instead of hard-coding ELLPACK:
 
 * ``kind == 'ell'`` (default / trusted plans): per-row padded neighbor
   lists, the original path — rectangular static gather tensor, halo = the
@@ -41,7 +44,8 @@ from repro.core.cache import CachedGraph, build_cached_graph
 
 Array = Any
 
-__all__ = ["DistGraph", "build_dist_graph", "distributed_spmm"]
+__all__ = ["DistGraph", "build_dist_graph", "distributed_spmm",
+           "comm_volume"]
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -199,7 +203,19 @@ def _build_dist_sell(row, col, val, deg, nrows: int, ncols: int,
 
 
 def _partition_axis(mesh: Mesh) -> str:
+    """The mesh axis the 1-D row bands shard over: 'data' when the mesh has
+    one, else the mesh's first axis (the single-axis test meshes)."""
     return "data" if "data" in mesh.shape else next(iter(mesh.shape))
+
+
+def comm_volume(g: DistGraph, k: int) -> dict:
+    """Per-device collective traffic (feature rows / elements) of one
+    ``distributed_spmm`` step: the 1-D halo exchange all-gathers the FULL
+    padded feature matrix on every device — O(N * K) regardless of the
+    device count, which is exactly what the 2-D partition
+    (:func:`repro.dist.gnn2d.comm_volume_2d`) cuts to O(N/sqrt(P))."""
+    n_pad = -(-g.ncols // g.parts) * g.parts
+    return dict(gather_rows=n_pad, scatter_rows=0, elements=n_pad * k)
 
 
 def distributed_spmm(g: DistGraph, h: Array, mesh: Mesh,

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_grid_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -30,3 +30,17 @@ def make_local_mesh(data: int = 1, model: int = 1):
     data = min(data, n)
     model = min(model, max(n // data, 1))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_grid_mesh(devices: int | None = None):
+    """(pr x pc) ('row', 'col') sub-mesh for the 2-D vertex-cut GNN path.
+
+    Picks the most square factorization of the device count (pr = the
+    largest divisor <= sqrt(P)), which is what makes the per-device
+    communication O(N/sqrt(P)) — see dist/gnn2d.py. A square count (4, 16,
+    64, 256 chips) yields the exact sqrt(P) x sqrt(P) grid."""
+    n = devices if devices is not None else len(jax.devices())
+    pr = max(int(n ** 0.5), 1)
+    while n % pr:
+        pr -= 1
+    return jax.make_mesh((pr, n // pr), ("row", "col"))

@@ -27,7 +27,8 @@ from repro.dist.sharding import Rules, resolve_spec
 Array = Any
 
 __all__ = ["LM_RULES", "param_logical_axes", "param_shardings",
-           "state_shardings", "batch_shardings", "cache_shardings"]
+           "state_shardings", "batch_shardings", "cache_shardings",
+           "graph2d_shardings"]
 
 
 LM_RULES = Rules({
@@ -137,3 +138,21 @@ def cache_shardings(mesh: Mesh, cache: dict, rules: Optional[Rules] = None
     rules = rules or LM_RULES
     return {k: _sharding(mesh, _CACHE_AXES.get(k, ()), v, rules)
             for k, v in cache.items()}
+
+
+def graph2d_shardings(mesh: Mesh, g) -> Any:
+    """:class:`repro.dist.gnn2d.Graph2D` pytree -> matching pytree of
+    NamedSharding, placing each tile on its owning (row, col) device up
+    front so ``jax.device_put(g, graph2d_shardings(mesh, g))`` pre-stages
+    the partition instead of resharding lazily on the first SpMM step.
+    Every leaf is tile-stacked (or, for ``inv_deg``, row-major) on dim 0,
+    so all of them shard dim 0 over the grid axes."""
+    from repro.dist.sharding import grid_axes
+    row_ax, col_ax = grid_axes(mesh)
+
+    def one(leaf):
+        spec = jax.sharding.PartitionSpec(
+            (row_ax, col_ax), *((None,) * (leaf.ndim - 1)))
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map(one, g)

@@ -31,7 +31,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 Array = Any
 
 __all__ = ["Rules", "use_rules", "current_rules", "shard_constraint",
-           "resolve_spec", "logical_sharding", "_current_mesh"]
+           "resolve_spec", "logical_sharding", "grid_axes", "_current_mesh"]
 
 
 def _normalize(axes) -> tuple[str, ...]:
@@ -143,6 +143,21 @@ def logical_sharding(mesh: Mesh, logical_axes: Sequence[Optional[str]],
                      rules: Optional[Rules] = None) -> NamedSharding:
     """NamedSharding for a tensor annotated with logical axes."""
     return NamedSharding(mesh, resolve_spec(logical_axes, mesh, shape, rules))
+
+
+def grid_axes(mesh: Mesh) -> tuple[str, str]:
+    """The (row, col) mesh-axis pair the 2-D vertex-cut GNN path runs over.
+
+    Prefers literal ``('row', 'col')`` axes (what
+    :func:`repro.dist.mesh.make_grid_mesh` builds); any other mesh
+    contributes its first two axes in declaration order, so the 2-D path
+    also runs on a generic ('data', 'model') pod slice. Axes beyond the
+    first two are left alone (arrays replicate over them)."""
+    names = tuple(mesh.axis_names)
+    if "row" in names and "col" in names:
+        return "row", "col"
+    assert len(names) >= 2, f"2-D partition needs a >=2-axis mesh, got {names}"
+    return names[0], names[1]
 
 
 def shard_constraint(x: Array, logical_axes: Sequence[Optional[str]]) -> Array:

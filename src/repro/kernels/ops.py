@@ -32,6 +32,8 @@ __all__ = [
 
 
 def on_tpu() -> bool:
+    """True when the default jax backend is a TPU — the dispatchers below
+    use this to choose Pallas kernels over their XLA proxies."""
     return jax.default_backend() == "tpu"
 
 
@@ -75,6 +77,9 @@ def bsr_spmm(a: BSR, h: jnp.ndarray, *, fk: int = 256,
 
 def ell_spmm(a: ELL, h: jnp.ndarray, *, interpret: bool | None = None
              ) -> jnp.ndarray:
+    """(a.nrows, K) = a @ h over the row-padded ELLPACK neighbor lists
+    (sum semiring). Pallas gather kernel on TPU, the jnp oracle elsewhere;
+    ``interpret=True`` forces the Pallas body through the interpreter."""
     use_pallas = on_tpu() if interpret is None else True
     if use_pallas:
         from repro.kernels.ell_spmm import ell_spmm_pallas
@@ -118,6 +123,9 @@ def sell_spmm_xla(a: SELL, h: jnp.ndarray) -> jnp.ndarray:
 
 def sell_spmm(a: SELL, h: jnp.ndarray, *, interpret: bool | None = None
               ) -> jnp.ndarray:
+    """(a.nrows, K) = a @ h over SELL-C-σ packed slices (sum semiring),
+    output already un-sorted back to original row order via ``inv_perm``.
+    Pallas kernel on TPU, :func:`sell_spmm_xla` elsewhere."""
     use_pallas = on_tpu() if interpret is None else True
     if use_pallas:
         from repro.kernels.sell_spmm import sell_spmm_pallas
@@ -132,6 +140,9 @@ def sell_spmm(a: SELL, h: jnp.ndarray, *, interpret: bool | None = None
 def sddmm_bsr(a: BSR, x: jnp.ndarray, y: jnp.ndarray, *,
               scale_by_a: bool = True,
               interpret: bool | None = None) -> jnp.ndarray:
+    """Sampled dense-dense matmul over A's block pattern: returns
+    (nblocks, br, bc) per-block scores x_i . y_j, optionally scaled by A's
+    stored values. MXU-tiled Pallas kernel on TPU, vmapped XLA otherwise."""
     use_pallas = on_tpu() if interpret is None else True
     if use_pallas:
         from repro.kernels.sddmm import sddmm_bsr_pallas
@@ -144,6 +155,9 @@ def sddmm_bsr(a: BSR, x: jnp.ndarray, y: jnp.ndarray, *,
 def fusedmm_bsr(a: BSR, x: jnp.ndarray, y: jnp.ndarray, h: jnp.ndarray, *,
                 edge_op: str = "softmax",
                 interpret: bool | None = None) -> jnp.ndarray:
+    """Fused SDDMM -> edge op -> SpMM over BSR tiles: out[i] = sum_j
+    f(x_i . y_j) h_j without materializing the edge tensor in HBM
+    (paper §3.4 / FusedMM). ``edge_op``: softmax | sigmoid | none."""
     use_pallas = on_tpu() if interpret is None else True
     if use_pallas:
         from repro.kernels.fusedmm import fusedmm_bsr_pallas
@@ -185,6 +199,9 @@ def ragged_gemm(x: jnp.ndarray, w: jnp.ndarray, tile_expert: jnp.ndarray, *,
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int | None = None,
                     interpret: bool | None = None) -> jnp.ndarray:
+    """Tiled online-softmax attention for LM prefill; ``window`` enables
+    sliding-window masking. Pallas on TPU, chunked XLA attention
+    elsewhere."""
     use_pallas = on_tpu() if interpret is None else True
     if use_pallas:
         from repro.kernels.flash_attention import flash_attention_pallas

@@ -1,0 +1,93 @@
+"""Docs health check, run by CI: internal links and referenced file paths
+in README.md and docs/ must resolve.
+
+    python tools/check_docs.py
+
+Checks, per markdown file:
+  * ``[text](target)`` links: relative targets must exist (resolved from
+    the file's directory); ``#fragment`` anchors must match a heading in
+    the target file (GitHub slug rules, approximated); http(s) links are
+    skipped (no network in CI).
+  * inline-code path references (`src/.../x.py`, `tools/y.py`, ...): must
+    exist relative to the repo root. Templates (``BENCH_<name>.json``),
+    globs and home paths are skipped.
+
+Exit code 1 with a per-problem listing on failure.
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_CODE_PATH = re.compile(r"`([\w./-]+\.(?:py|md|json|toml|yml|txt))`")
+_HEADING = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def _slug(heading: str) -> str:
+    """GitHub's heading-anchor slug, approximated."""
+    s = heading.strip().lower()
+    s = re.sub(r"[`*_]", "", s)
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def _anchors(path: str) -> set[str]:
+    with open(path) as f:
+        return {_slug(m.group(1)) for m in _HEADING.finditer(f.read())}
+
+
+def check_file(md_path: str) -> list[str]:
+    problems = []
+    base = os.path.dirname(md_path)
+    rel = os.path.relpath(md_path, _ROOT)
+    with open(md_path) as f:
+        text = f.read()
+
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        target, _, frag = target.partition("#")
+        dest = md_path if not target else os.path.normpath(
+            os.path.join(base, target))
+        if target and not os.path.exists(dest):
+            problems.append(f"{rel}: broken link -> {m.group(1)}")
+            continue
+        if frag and dest.endswith(".md") and _slug(frag) not in _anchors(dest):
+            problems.append(f"{rel}: missing anchor -> {m.group(1)}")
+
+    for m in _CODE_PATH.finditer(text):
+        p = m.group(1)
+        if p.startswith((".", "~", "/")) or "<" in p or "*" in p:
+            continue
+        if "/" not in p:          # bare filenames are prose, not references
+            continue
+        # repo-root paths and package-relative shorthand (`core/sparse.py`
+        # means src/repro/core/sparse.py) both count as resolving
+        if not (os.path.exists(os.path.join(_ROOT, p))
+                or os.path.exists(os.path.join(_ROOT, "src", "repro", p))):
+            problems.append(f"{rel}: referenced path missing -> {p}")
+    return problems
+
+
+def main() -> int:
+    files = [os.path.join(_ROOT, "README.md")] + sorted(
+        glob.glob(os.path.join(_ROOT, "docs", "**", "*.md"), recursive=True))
+    problems = []
+    for f in files:
+        if os.path.exists(f):
+            problems += check_file(f)
+    for p in problems:
+        print(f"FAIL {p}")
+    print(f"checked {len(files)} file(s): "
+          f"{'OK' if not problems else f'{len(problems)} problem(s)'}")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
