@@ -75,7 +75,8 @@ def main() -> None:
 
     from benchmarks import (bench_cached_backprop, bench_dist2d,
                             bench_gnn_training, bench_kernels, bench_lm_step,
-                            bench_moe_dispatch, bench_tuning_curve)
+                            bench_moe_dispatch, bench_sampling,
+                            bench_tuning_curve)
 
     scale = 1 / 256 if args.fast else 1 / 64
     benches = {
@@ -95,6 +96,14 @@ def main() -> None:
         "dist2d": lambda: bench_dist2d.run(
             n=1024 if args.fast else 4096,
             nnz=20_000 if args.fast else 200_000),
+        # fast = the CI smoke (tiny fanout, 1/512 scale, 2 epochs); full =
+        # the acceptance point (scale 1/32, within-2-points criterion)
+        "sampling": lambda: bench_sampling.run(
+            scale=1 / 512 if args.fast else 1 / 32,
+            fanouts=(5, 5) if args.fast else (10, 10),
+            batch_size=128 if args.fast else 512,
+            epochs=2 if args.fast else 5,
+            fb_epochs=5 if args.fast else 30),
         "moe_dispatch": lambda: bench_moe_dispatch.run(
             t=2048 if args.fast else 8192),
         "lm_step": lambda: bench_lm_step.run(

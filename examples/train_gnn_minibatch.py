@@ -1,0 +1,29 @@
+"""Minibatch neighbor-sampled GraphSAGE, end to end.
+
+    PYTHONPATH=src python examples/train_gnn_minibatch.py
+
+Demonstrates the production training loop: the two-line patch(), a
+persisted TuningDB (bucket plans tune once per machine), seeded k-hop
+sampling, and exact layer-wise inference for the final accuracy — then
+the same weights scored against the full-batch trainer for parity.
+"""
+import repro.core as isplib
+from repro.core import TuningDB
+from repro.data import make_dataset
+from repro.train import train_gnn, train_gnn_minibatch
+
+isplib.patch()
+
+ds = make_dataset("reddit", scale=1 / 256)
+
+mb = train_gnn_minibatch("sage-mean", ds, fanouts=(10, 10), batch_size=256,
+                         hidden=128, epochs=5, tuning_db=TuningDB())
+print(f"minibatch : test_acc={mb.test_acc:.3f} "
+      f"epoch={mb.epoch_time_s * 1e3:.0f}ms "
+      f"traces={mb.n_traces}/{mb.n_buckets} plans={mb.plan_kinds}")
+
+fb = train_gnn("sage-mean", ds, hidden=128, epochs=30)
+print(f"full-batch: test_acc={fb.test_acc:.3f} "
+      f"epoch={fb.epoch_time_s * 1e3:.0f}ms plan={fb.plan_kind}")
+print(f"accuracy gap: {fb.test_acc - mb.test_acc:+.3f} "
+      f"(acceptance: within 2 points)")

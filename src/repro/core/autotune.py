@@ -65,6 +65,8 @@ __all__ = [
     "autotune",
     "tuning_curve",
     "TuningDB",
+    "sell_sigma_candidates",
+    "sell_candidates_from_degrees",
 ]
 
 
@@ -150,19 +152,63 @@ class GraphStats:
 
 
 _DEFAULT_TILES: tuple = ((128, 128), (256, 128), (128, 256), (64, 128), (32, 128))
-# SELL slice heights swept by the tuner (sublane multiples) x sort windows
-# (0 = global sort; a finite window keeps the row permutation local).
-_SELL_CANDIDATES: tuple = ((8, 0), (16, 0), (32, 0), (8, 256), (16, 256))
+# SELL slice heights swept by the tuner (sublane multiples). Sort windows
+# (σ) are derived per graph from the degree histogram — see
+# :func:`sell_sigma_candidates`; ``_SELL_SIGMA_FALLBACK`` serves degenerate
+# (empty / degree-free) graphs where no histogram exists.
+_SELL_C_VALUES: tuple = (8, 16, 32)
+_SELL_SIGMA_FALLBACK: tuple = (0, 256)
+
+
+def sell_sigma_candidates(degrees: np.ndarray,
+                          fallback: Sequence[int] = _SELL_SIGMA_FALLBACK
+                          ) -> tuple:
+    """Derive SELL sort-window (σ) candidates from the degree histogram.
+
+    The knee of the Lorenz curve — the row count at which the sorted-degree
+    cumulative mass is furthest above the uniform diagonal — is how many
+    rows carry the graph's "excess" degree. A sort window just covering
+    that knee groups the heavy rows without paying a global permutation;
+    the candidate set is {0 (global sort), knee window, 4x knee window}
+    clipped to the row count. Degenerate graphs (no rows / no edges) get
+    the static fallback.
+    """
+    deg = np.asarray(degrees, np.int64)
+    n = int(deg.shape[0])
+    if n == 0 or deg.sum() == 0:
+        return tuple(fallback)
+    d = np.sort(deg)[::-1]
+    lorenz = np.cumsum(d) / d.sum()                  # mass of top-i rows
+    frac = np.arange(1, n + 1) / n                   # uniform diagonal
+    knee = int(np.argmax(lorenz - frac)) + 1         # rows holding the excess
+    window = 1 << int(np.ceil(np.log2(max(knee, 8))))
+    cands = {0}
+    for w in (window, 4 * window):
+        if w < n:                                    # >= n degenerates to 0
+            cands.add(w)
+    return tuple(sorted(cands))
+
+
+def sell_candidates_from_degrees(degrees: np.ndarray,
+                                 c_values: Sequence[int] = _SELL_C_VALUES
+                                 ) -> tuple:
+    """(C, σ) sweep set: slice heights x histogram-derived sort windows."""
+    return tuple((c, s) for c in c_values
+                 for s in sell_sigma_candidates(degrees))
 
 
 def graph_stats(a, tile_candidates: Sequence[tuple] = _DEFAULT_TILES,
-                sell_candidates: Sequence[tuple] = _SELL_CANDIDATES
+                sell_candidates: Sequence[tuple] | None = None
                 ) -> GraphStats:
-    """``a`` is a COO (repro.core.sparse). Host-side numpy pass."""
+    """``a`` is a COO (repro.core.sparse). Host-side numpy pass.
+    ``sell_candidates=None`` derives the (C, σ) sweep from the degree
+    histogram (:func:`sell_candidates_from_degrees`)."""
     from repro.core.sparse import sell_slice_degrees
     row = np.asarray(a.row)[: a.nse].astype(np.int64)
     col = np.asarray(a.col)[: a.nse].astype(np.int64)
     deg = np.bincount(row, minlength=a.nrows)
+    if sell_candidates is None:
+        sell_candidates = sell_candidates_from_degrees(deg)
     counts = []
     for br, bc in tile_candidates:
         nbc = -(-a.ncols // bc)
@@ -296,7 +342,7 @@ def _vmem_ok(br: int, bc: int, fk: int, hw: HardwareModel,
 def autotune(a, k_hint: int = 128, *, hw: HardwareModel | None = None,
              measure: bool = False, semiring_reduce: str = "sum",
              tile_candidates: Sequence[tuple] = _DEFAULT_TILES,
-             sell_candidates: Sequence[tuple] = _SELL_CANDIDATES,
+             sell_candidates: Sequence[tuple] | None = None,
              stats: GraphStats | None = None) -> KernelPlan:
     """Pick the kernel variant + tile shape for (graph ``a``, width ``k_hint``).
 
@@ -309,7 +355,14 @@ def autotune(a, k_hint: int = 128, *, hw: HardwareModel | None = None,
 
     ``measure=True`` additionally times jitted candidates on the attached
     backend and overrides the analytic pick (used by the Fig. 2 bench); the
-    measured pass covers every eligible family — trusted, BSR, ELL, SELL.
+    measured pass covers every eligible family — trusted, BSR, ELL, SELL —
+    and times the ``semiring_reduce`` actually requested (mean pays its
+    inverse-degree post-scale, max/min their segment reduce), so plans for
+    different semirings carry their own measured costs.
+
+    ``sell_candidates=None`` (default) derives the (C, σ) sweep from the
+    graph's degree histogram — the knee of the Lorenz curve sets the sort
+    windows (:func:`sell_sigma_candidates`).
     """
     hw = hw or probe_hardware()
     stats = stats or graph_stats(a, tile_candidates, sell_candidates)
@@ -320,8 +373,12 @@ def autotune(a, k_hint: int = 128, *, hw: HardwareModel | None = None,
     lane_aligned = k_hint % hw.lane == 0
     mxu_semiring = semiring_reduce in ("sum", "mean")
     if not (lane_aligned and mxu_semiring):
-        return dataclasses.replace(trusted, est_trusted_s=t_trusted,
+        plan = dataclasses.replace(trusted, est_trusted_s=t_trusted,
                                    est_generated_s=float("inf"))
+        if measure:     # record a measured trusted row for this semiring
+            plan = _measure_override(a, k_hint, plan, stats, hw=hw,
+                                     semiring=semiring_reduce)
+        return plan
 
     best: KernelPlan = dataclasses.replace(
         trusted, est_trusted_s=t_trusted, est_generated_s=float("inf"))
@@ -349,21 +406,21 @@ def autotune(a, k_hint: int = 128, *, hw: HardwareModel | None = None,
 
     # SELL-C-σ candidates: the (C, K)-tile accumulator plus per-slice
     # padding makes these eligible for ANY degree distribution — the sort
-    # absorbs the skew the ELL rule rejects.
-    for c, sigma in sell_candidates:
-        try:
-            cand = KernelPlan(kind="sell", sell_c=c, sell_sigma=sigma,
-                              k_hint=k_hint)
-            t = estimate_plan_time(stats, k_hint, cand, hw)
-        except KeyError:            # stats built without this candidate
-            continue
+    # absorbs the skew the ELL rule rejects. The sweep set always comes
+    # from ``stats`` so cost model and packing agree on the step counts
+    # (histogram-derived unless the caller pinned candidates explicitly).
+    for c, sigma, _ in stats.sell_counts:
+        cand = KernelPlan(kind="sell", sell_c=c, sell_sigma=sigma,
+                          k_hint=k_hint)
+        t = estimate_plan_time(stats, k_hint, cand, hw)
         if t < best_t:
             best_t = t
             best = dataclasses.replace(cand, est_generated_s=t,
                                        est_trusted_s=t_trusted)
 
     if measure:
-        best = _measure_override(a, k_hint, best, stats, hw=hw)
+        best = _measure_override(a, k_hint, best, stats, hw=hw,
+                                 semiring=semiring_reduce)
     return best
 
 
@@ -377,65 +434,92 @@ def _time_callable(fn: Callable, *args, reps: int = 3) -> float:
     return (time.perf_counter() - t0) / reps
 
 
-def _measure_plan(a, plan: KernelPlan, h, sr) -> float:
+def _measure_plan(a, plan: KernelPlan, h, sr, inv_deg=None) -> float:
     """Wall-clock one candidate on its actual dispatch path (the XLA proxy
-    on CPU, Pallas on TPU — whatever ``kops`` routes to)."""
+    on CPU, Pallas on TPU — whatever ``kops`` routes to). Generated kernels
+    compute the sum semiring; for mean the timed callable includes the
+    cached inverse-degree post-scale — the cost structure the production
+    path (``core/spmm._forward``) actually pays for that semiring."""
     from repro.kernels import ops as kops
     from repro.kernels.ref import spmm_ell_ref
     from repro.core import sparse as sp
 
+    def _with_epilogue(kernel):
+        if sr.reduce == "mean":
+            return lambda hh: kernel(hh) * inv_deg[:, None]
+        return kernel
+
     if plan.kind == "bsr":
         bsr = sp.bsr_from_coo(a, br=plan.br, bc=plan.bc)
-        return _time_callable(
-            jax.jit(lambda hh: kops.bsr_spmm(bsr, hh, fk=plan.fk)), h)
+        return _time_callable(jax.jit(_with_epilogue(
+            lambda hh: kops.bsr_spmm(bsr, hh, fk=plan.fk)[: a.nrows])), h)
     if plan.kind == "ell":
+        from repro.core.semiring import get_semiring
         ell = sp.ell_from_coo(a)         # full max_deg: plans must be exact
-        return _time_callable(
-            jax.jit(lambda hh: spmm_ell_ref(ell, hh, sr)), h)
+        sum_sr = get_semiring("sum", sr.combine)
+        return _time_callable(jax.jit(_with_epilogue(
+            lambda hh: spmm_ell_ref(ell, hh, sum_sr))), h)
     if plan.kind == "sell":
         sell = sp.sell_from_coo(a, c=plan.sell_c, sigma=plan.sell_sigma)
-        return _time_callable(
-            jax.jit(lambda hh: kops.sell_spmm(sell, hh)), h)
+        return _time_callable(jax.jit(_with_epilogue(
+            lambda hh: kops.sell_spmm(sell, hh))), h)
     raise ValueError(plan.kind)
 
 
 def _measure_override(a, k: int, plan: KernelPlan, stats: GraphStats, *,
-                      hw: HardwareModel | None = None) -> KernelPlan:
+                      hw: HardwareModel | None = None,
+                      semiring: str = "sum") -> KernelPlan:
     """Wall-clock trusted vs one candidate per generated family (the
     analytic pick plus the best SELL and the ELL fallback) and keep the
-    empirically fastest, updating ``est_*`` with measured seconds."""
+    empirically fastest, updating ``est_*`` with measured seconds.
+
+    ``semiring`` is the reduction the caller will actually run: the trusted
+    path is timed with that semiring's own segment reduce, and generated
+    candidates include the mean post-scale — so a TuningDB row keyed
+    ``(graph, K, semiring)`` stores costs for *its* semiring, not sum's.
+    Max/min admit no generated candidates (paper §3.4); their measured row
+    is the trusted wall-clock alone."""
     import jax.numpy as jnp
     from repro.core.semiring import get_semiring
 
     hw = hw or probe_hardware()
     h = jnp.asarray(np.random.default_rng(0).standard_normal(
         (a.ncols, k)).astype(np.float32))
-    sr = get_semiring("sum")
+    sr = get_semiring(semiring)
+    deg = np.zeros(a.nrows, np.float32)
+    np.add.at(deg, np.asarray(a.row)[: a.nse], 1.0)
+    degrees = jnp.asarray(deg)
+    inv_deg = jnp.asarray(1.0 / np.maximum(deg, 1.0))
 
     from repro.kernels.ref import spmm_coo_ref
     t_trusted = _time_callable(
-        jax.jit(lambda hh: spmm_coo_ref(a, hh, sr)), h)
+        jax.jit(lambda hh: spmm_coo_ref(a, hh, sr, degrees=degrees)), h)
 
+    # Generated candidates obey the same eligibility gates as the analytic
+    # sweep (paper §3.2/§3.4): sum/mean semiring AND lane-aligned K. The
+    # production dispatch (core/spmm) refuses misaligned-K generated plans,
+    # so measuring one here would persist a row production can't honor.
     candidates: list[KernelPlan] = []
-    if plan.kind != "trusted":
-        candidates.append(plan)
-    if not any(p.kind == "sell" for p in candidates) and stats.sell_counts:
-        best_sell = min(
-            (KernelPlan(kind="sell", sell_c=c, sell_sigma=s, k_hint=k)
-             for c, s, _ in stats.sell_counts),
-            key=lambda p: estimate_plan_time(stats, k, p, hw))
-        candidates.append(best_sell)
-    # ELL is measured under the same degree-boundedness gate as the analytic
-    # sweep — on a skewed graph the full-max_deg gather it would time is
-    # exactly the pathology SELL avoids, so spending GBs to confirm it loses
-    # is wasted tuning time.
-    ell_bounded = stats.max_deg <= max(4 * stats.avg_deg, 8)
-    if ell_bounded and not any(p.kind == "ell" for p in candidates):
-        candidates.append(KernelPlan(kind="ell", k_hint=k))
+    if sr.mxu_eligible and k % hw.lane == 0:
+        if plan.kind != "trusted":
+            candidates.append(plan)
+        if not any(p.kind == "sell" for p in candidates) and stats.sell_counts:
+            best_sell = min(
+                (KernelPlan(kind="sell", sell_c=c, sell_sigma=s, k_hint=k)
+                 for c, s, _ in stats.sell_counts),
+                key=lambda p: estimate_plan_time(stats, k, p, hw))
+            candidates.append(best_sell)
+        # ELL is measured under the same degree-boundedness gate as the
+        # analytic sweep — on a skewed graph the full-max_deg gather it
+        # would time is exactly the pathology SELL avoids, so spending GBs
+        # to confirm it loses is wasted tuning time.
+        ell_bounded = stats.max_deg <= max(4 * stats.avg_deg, 8)
+        if ell_bounded and not any(p.kind == "ell" for p in candidates):
+            candidates.append(KernelPlan(kind="ell", k_hint=k))
 
     best, best_t = None, float("inf")
     for cand in candidates:
-        t = _measure_plan(a, cand, h, sr)
+        t = _measure_plan(a, cand, h, sr, inv_deg=inv_deg)
         if t < best_t:
             best, best_t = cand, t
 
@@ -509,11 +593,15 @@ class TuningDB:
         return len(self._db)
 
     @staticmethod
-    def key(a, k: int) -> str:
-        """Structural fingerprint of (graph, K). Stable across equivalent
-        graphs (same sparsity pattern — values don't matter to the plan) and
-        collision-resistant across different structures of the same size via
-        a CRC over the sorted edge list."""
+    def key(a, k: int, semiring: str = "sum") -> str:
+        """Structural fingerprint of (graph, K, semiring). Stable across
+        equivalent graphs (same sparsity pattern — values don't matter to
+        the plan) and collision-resistant across different structures of the
+        same size via a CRC over the sorted edge list. Sum-semiring keys
+        carry no suffix, so rows persisted before per-semiring tuning keep
+        resolving; mean/max/min get their own rows (their measured costs
+        include the post-scale / segment reduce — see
+        :func:`_measure_override`)."""
         import zlib
         row = np.asarray(a.row)[: a.nse]
         col = np.asarray(a.col)[: a.nse]
@@ -521,17 +609,30 @@ class TuningDB:
         row = np.ascontiguousarray(row[order], np.int32)
         col = np.ascontiguousarray(col[order], np.int32)
         fp = zlib.crc32(col.tobytes(), zlib.crc32(row.tobytes()))
-        return f"{a.nrows}x{a.ncols}nse{a.nse}fp{fp:08x}k{k}"
+        sfx = "" if semiring == "sum" else f"sr{semiring}"
+        return f"{a.nrows}x{a.ncols}nse{a.nse}fp{fp:08x}k{k}{sfx}"
 
-    def get(self, a, k: int) -> KernelPlan | None:
-        """Previously persisted plan for (graph ``a``, width ``k``), or
-        None — a miss means the caller should run the sweep and ``put``."""
-        d = self._db.get(self.key(a, k))
+    def get(self, a, k: int, semiring: str = "sum") -> KernelPlan | None:
+        """Previously persisted plan for (graph ``a``, width ``k``,
+        ``semiring``), or None — a miss means the caller should run the
+        sweep and ``put``."""
+        return self.get_key(self.key(a, k, semiring))
+
+    def put(self, a, k: int, plan: KernelPlan,
+            semiring: str = "sum") -> None:
+        """Record a tuner decision in memory; ``save()`` persists it."""
+        self.put_key(self.key(a, k, semiring), plan)
+
+    # Generic string-keyed rows: callers that tune per *shape bucket*
+    # rather than per concrete graph (repro.sampling's block packing —
+    # every minibatch has a fresh edge set, so a structural CRC would
+    # never hit) bring their own key format.
+    def get_key(self, key: str) -> KernelPlan | None:
+        d = self._db.get(key)
         return KernelPlan.from_json(d) if d else None
 
-    def put(self, a, k: int, plan: KernelPlan) -> None:
-        """Record a tuner decision in memory; ``save()`` persists it."""
-        self._db[self.key(a, k)] = plan.to_json()
+    def put_key(self, key: str, plan: KernelPlan) -> None:
+        self._db[key] = plan.to_json()
 
     def save(self) -> None:
         """Atomically write the DB to ``self.path`` (tmp file + rename, so

@@ -75,24 +75,28 @@ def build_cached_graph(a: sp.COO, *, k_hint: int = 128,
                        plan: KernelPlan | None = None,
                        tune: bool = True,
                        measure: bool = False,
+                       semiring_reduce: str = "sum",
                        db: Optional[TuningDB] = None) -> CachedGraph:
     """Host-side one-time preprocessing: transpose, degrees, BSR/SELL
     packing, kernel plan. ``k_hint`` is the embedding width the tuner
     optimizes for. A ``db`` (TuningDB) short-circuits the sweep with a
     previously persisted decision and records fresh ones — the paper's
-    tune-once amortization across runs."""
+    tune-once amortization across runs. ``semiring_reduce`` keys the DB row
+    and, under ``measure=True``, makes the wall-clock pass time that
+    semiring's own cost (mean's post-scale, max/min's segment reduce)."""
     a_t = sp.coo_transpose(a)
     deg = sp.row_degrees(a)
     deg_t = sp.row_degrees(a_t)
 
     if plan is None:
         if db is not None:
-            plan = db.get(a, k_hint)
+            plan = db.get(a, k_hint, semiring=semiring_reduce)
         if plan is None:
             if tune:
-                plan = autotune(a, k_hint, measure=measure)
+                plan = autotune(a, k_hint, measure=measure,
+                                semiring_reduce=semiring_reduce)
                 if db is not None:
-                    db.put(a, k_hint, plan)
+                    db.put(a, k_hint, plan, semiring=semiring_reduce)
                     db.save()
             else:
                 plan = KernelPlan.trusted()

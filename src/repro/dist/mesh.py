@@ -9,7 +9,19 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_local_mesh", "make_grid_mesh"]
+__all__ = ["make_production_mesh", "make_local_mesh", "make_grid_mesh",
+           "axis_shard_count"]
+
+
+def axis_shard_count(mesh, axis: str = "data") -> int:
+    """Size of a named mesh axis, with "axis not in this mesh" reading as
+    one shard — the contract seed-sharding (repro.sampling.loader) and
+    other data-parallel consumers rely on to run unchanged on a
+    single-device mesh."""
+    try:
+        return int(mesh.shape[axis])
+    except (KeyError, TypeError):
+        return 1
 
 
 def make_production_mesh(*, multi_pod: bool = False):

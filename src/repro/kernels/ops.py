@@ -21,6 +21,7 @@ __all__ = [
     "bsr_spmm",
     "bsr_spmm_xla",
     "ell_spmm",
+    "gathered_ell_spmm",
     "sell_spmm",
     "sell_spmm_xla",
     "sell_packed_reduce",
@@ -78,8 +79,11 @@ def bsr_spmm(a: BSR, h: jnp.ndarray, *, fk: int = 256,
 def ell_spmm(a: ELL, h: jnp.ndarray, *, interpret: bool | None = None
              ) -> jnp.ndarray:
     """(a.nrows, K) = a @ h over the row-padded ELLPACK neighbor lists
-    (sum semiring). Pallas gather kernel on TPU, the jnp oracle elsewhere;
-    ``interpret=True`` forces the Pallas body through the interpreter."""
+    (sum semiring). Rectangular operands are first-class: ``h`` has
+    ``a.ncols`` rows, which sampled bipartite blocks set to their source
+    count (≠ nrows). Pallas gather kernel on TPU, the jnp oracle
+    elsewhere; ``interpret=True`` forces the Pallas body through the
+    interpreter."""
     use_pallas = on_tpu() if interpret is None else True
     if use_pallas:
         from repro.kernels.ell_spmm import ell_spmm_pallas
@@ -87,6 +91,27 @@ def ell_spmm(a: ELL, h: jnp.ndarray, *, interpret: bool | None = None
     from repro.kernels.ref import spmm_ell_ref
     from repro.core.semiring import get_semiring
     return spmm_ell_ref(a, h, get_semiring("sum"))
+
+
+def gathered_ell_spmm(a: ELL, h_full: jnp.ndarray, src_ids: jnp.ndarray
+                      ) -> jnp.ndarray:
+    """``ell_spmm(a, h_full[src_ids])`` without materializing the gathered
+    source block: the block-local neighbor ids are composed with the
+    global ``src_ids`` relabeling so XLA fuses both gathers into one
+    (nrows, max_deg, K) fetch from the full feature matrix.
+
+    This is the layer-wise-inference hot path — there the dense operand is
+    the whole node-embedding table, and the (n_src, K) staging copy this
+    skips is the dominant memory cost per block. Sentinel slots compose to
+    out-of-range twice (local pad -> ``src_ids`` fill past ``h_full`` ->
+    zero row) and carry ``val == 0``, so they stay doubly inert. Sum
+    semiring, like :func:`ell_spmm`.
+    """
+    gid = jnp.take(src_ids, a.idx, mode="fill",
+                   fill_value=h_full.shape[0])
+    gathered = jnp.take(h_full, gid, axis=0, mode="fill",
+                        fill_value=0)                      # (N, D, K)
+    return (a.val[:, :, None].astype(gathered.dtype) * gathered).sum(axis=1)
 
 
 # --------------------------------------------------------------------------

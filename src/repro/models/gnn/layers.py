@@ -23,7 +23,8 @@ from repro.models.gnn.bundle import GraphBundle
 Array = Any
 
 __all__ = ["init_gcn", "gcn_conv", "init_sage", "sage_conv", "init_gin",
-           "gin_conv", "init_gat", "dot_gat_conv"]
+           "gin_conv", "init_gat", "dot_gat_conv", "sage_conv_block",
+           "gin_conv_block"]
 
 
 def _glorot(key, shape):
@@ -74,6 +75,27 @@ def sage_conv(params: dict, bundle: GraphBundle, h: Array,
     return h @ params["w_self"] + agg @ params["w_neigh"] + params["b"]
 
 
+def _block_dst(pb, h: Array) -> Array:
+    """Destination-row view of a block's source features: an explicit
+    ``dst_pos`` gather rather than ``h[:n_dst]`` because bucket padding
+    breaks the dst-prefix property past the real destination count
+    (pad positions zero-fill)."""
+    return jnp.take(h, pb.dst_pos, axis=0, mode="fill", fill_value=0)
+
+
+def sage_conv_block(params: dict, pb, h: Array, aggr: str = "mean") -> Array:
+    """GraphSAGE over one sampled bipartite block (MFG): ``h`` holds the
+    block's *source* rows; output has the block's (padded) dst rows.
+    Same params as :func:`sage_conv` — minibatch-trained weights drop into
+    full-batch/layer-wise apply unchanged. The aggregation resolves
+    through the patch registry ('block_spmm'): tuned = the bucket plan's
+    packed ELL/SELL kernel, baseline = trusted segment ops."""
+    from repro.core.patch import resolve
+    agg = resolve("block_spmm")(pb, h, aggr)
+    h_dst = _block_dst(pb, h)
+    return h_dst @ params["w_self"] + agg @ params["w_neigh"] + params["b"]
+
+
 # --------------------------------------------------------------------------
 # GIN: h' = MLP((1 + eps) h + sum_{j in N(i)} h_j)
 # --------------------------------------------------------------------------
@@ -93,6 +115,16 @@ def gin_conv(params: dict, bundle: GraphBundle, h: Array) -> Array:
     g = bundle.tuned if is_patched() else bundle.raw
     s = spmm_fn(g, h, "sum")
     z = (1.0 + params["eps"]) * h + s
+    z = jax.nn.relu(z @ params["w1"] + params["b1"])
+    return z @ params["w2"] + params["b2"]
+
+
+def gin_conv_block(params: dict, pb, h: Array) -> Array:
+    """GIN over one sampled bipartite block; see :func:`sage_conv_block`
+    for the operand convention."""
+    from repro.core.patch import resolve
+    s = resolve("block_spmm")(pb, h, "sum")
+    z = (1.0 + params["eps"]) * _block_dst(pb, h) + s
     z = jax.nn.relu(z @ params["w1"] + params["b1"])
     return z @ params["w2"] + params["b2"]
 

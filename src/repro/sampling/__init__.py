@@ -1,0 +1,54 @@
+"""repro.sampling — minibatch neighbor-sampled training & inference.
+
+The full-batch trainer caps us at graphs whose features fit one device;
+this package is the production-scale alternative (the DGL pattern): sample
+a k-hop neighborhood around each seed minibatch, pack the resulting
+bipartite message-flow blocks in the autotuner's format, and run a jitted
+step whose shapes come from a bounded bucket ladder.
+
+Pipeline (one training step):
+
+    seed loader        repro.sampling.loader   shuffled, padded, shardable
+        │                                      over the mesh 'data' axis
+    k-hop sampler      repro.sampling.sampler  fused, seeded, host-side
+        │
+    bucket ladder      repro.sampling.buckets  log-many static shapes
+        │
+    plan-aware pack    repro.sampling.blocks   ELL/SELL per autotuned
+        │                                      bucket plan (TuningDB-backed)
+    jitted step        repro.train.gnn_minibatch
+
+The block aggregation is registered as the ``block_spmm`` op in the patch
+registry, so the paper's two-line ``patch()``/``unpatch()`` story covers
+sampled training too: patched -> plan-routed packed kernels, un-patched ->
+the trusted segment-op baseline.
+"""
+from repro.core.patch import register_baseline, register_tuned
+
+from repro.sampling.sampler import Block, NeighborSampler
+from repro.sampling.blocks import (BlockPlanCache, PackedBlock, block_spmm,
+                                   block_spmm_baseline, block_spmm_global,
+                                   gather_rows, pack_block)
+from repro.sampling.buckets import LayerBucket, plan_buckets, round_bucket
+from repro.sampling.loader import num_seed_batches, seed_batches, shard_seeds
+
+register_tuned("block_spmm", block_spmm)
+register_baseline("block_spmm", block_spmm_baseline)
+
+__all__ = [
+    "Block",
+    "NeighborSampler",
+    "PackedBlock",
+    "BlockPlanCache",
+    "pack_block",
+    "block_spmm",
+    "block_spmm_baseline",
+    "block_spmm_global",
+    "gather_rows",
+    "LayerBucket",
+    "plan_buckets",
+    "round_bucket",
+    "seed_batches",
+    "shard_seeds",
+    "num_seed_batches",
+]

@@ -1,0 +1,69 @@
+"""Seed-node loaders: shuffled epochs, static batch shapes, mesh sharding.
+
+The loader is the boundary between "dataset order" and "traced shapes":
+every batch it yields is padded to exactly ``batch_size`` seeds (the real
+count rides along for loss masking), so the seed level of the block stack
+is pinned and only inner levels touch the bucket ladder.
+
+Distribution hook: ``shard_seeds`` splits a seed set over the 'data' axis
+of any mesh built by ``repro.dist.mesh`` (round-robin, so R-MAT's id-local
+communities don't skew one shard), and ``seed_batches(..., num_shards=,
+shard_index=)`` makes each data-parallel worker walk only its shard while
+all workers agree on the epoch permutation (same seed -> same shuffle) —
+the single-host trainer and a multi-host launch share this code path.
+"""
+from __future__ import annotations
+
+from typing import Iterator
+
+import numpy as np
+
+__all__ = ["seed_batches", "shard_seeds", "num_seed_batches"]
+
+
+def shard_seeds(seeds, mesh, *, axis: str = "data") -> list[np.ndarray]:
+    """Partition ``seeds`` over ``mesh``'s ``axis`` (one array per slice,
+    round-robin). Reuses the production/test mesh builders in
+    ``repro.dist.mesh``; an axis absent from the mesh means one shard."""
+    from repro.dist.mesh import axis_shard_count
+    n = axis_shard_count(mesh, axis)
+    seeds = np.asarray(seeds)
+    return [seeds[i::n] for i in range(n)]
+
+
+def num_seed_batches(n_seeds: int, batch_size: int,
+                     drop_last: bool = False) -> int:
+    if drop_last:
+        return n_seeds // batch_size
+    return -(-n_seeds // batch_size)
+
+
+def seed_batches(seeds, batch_size: int, *, shuffle: bool = True,
+                 seed: int = 0, epoch: int = 0, drop_last: bool = False,
+                 num_shards: int = 1, shard_index: int = 0,
+                 ) -> Iterator[tuple[np.ndarray, int]]:
+    """Yield ``(padded_seeds, n_real)`` minibatches of seed node ids.
+
+    ``padded_seeds`` always has ``batch_size`` entries — a short tail batch
+    repeats its first seed (sampling stays well-defined on duplicates-free
+    prefixes; the pads are *sliced off* before sampling by the trainer, so
+    the pad convention here only fixes the array shape). The epoch
+    permutation is deterministic per ``(seed, epoch)`` and identical across
+    shards; each shard then walks its ``shard_index``-th round-robin slice,
+    so the union over shards is exactly one pass over ``seeds``."""
+    ids = np.asarray(seeds)
+    if shuffle:
+        rng = np.random.default_rng((int(seed), int(epoch)))
+        ids = ids[rng.permutation(len(ids))]
+    if num_shards > 1:
+        ids = ids[shard_index::num_shards]
+    for lo in range(0, len(ids), batch_size):
+        chunk = ids[lo: lo + batch_size]
+        if len(chunk) < batch_size and drop_last:
+            return
+        n_real = len(chunk)
+        if n_real < batch_size:
+            pad = np.full(batch_size - n_real, chunk[0] if n_real else 0,
+                          ids.dtype)
+            chunk = np.concatenate([chunk, pad])
+        yield chunk, n_real

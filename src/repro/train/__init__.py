@@ -1,3 +1,7 @@
 from repro.train.gnn import train_gnn, GNNTrainResult
+from repro.train.gnn_minibatch import (train_gnn_minibatch,
+                                       MinibatchTrainResult,
+                                       layerwise_inference, MB_ARCHS)
 
-__all__ = ["train_gnn", "GNNTrainResult"]
+__all__ = ["train_gnn", "GNNTrainResult", "train_gnn_minibatch",
+           "MinibatchTrainResult", "layerwise_inference", "MB_ARCHS"]

@@ -1,0 +1,290 @@
+"""Minibatch neighbor-sampled GNN training + layer-wise inference.
+
+The production-scale counterpart of ``train/gnn.py``: instead of one
+full-graph SpMM per layer per step, each step trains on a seed minibatch
+expanded by the fused k-hop sampler (``repro.sampling``), with the
+bipartite blocks packed in the autotuner's per-bucket format. An epoch is
+
+    shuffled seed loader -> sample -> bucket -> plan-aware pack -> jitted step
+
+and the step retraces at most once per bucket signature (geometric shape
+ladder), not once per batch. Evaluation is exact: layer-wise
+*full-neighbor* inference sweeps every node through each layer in batches,
+so reported accuracy has no sampling noise — only training does.
+
+Both paths honor the paper's two knobs: ``use_isplib`` flips the
+patch()/unpatch() registry (tuned packed kernels vs trusted segment ops),
+and a ``TuningDB`` persists the per-bucket plan decisions across runs.
+Weights are interchangeable with the full-batch trainer (same param
+pytree), which is what the accuracy-parity acceptance bench relies on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sparse as sp
+from repro.core.autotune import TuningDB
+from repro.core.patch import patched
+from repro.models.gnn import layers as L
+from repro.optim import adamw, apply_updates
+from repro.sampling import (BlockPlanCache, NeighborSampler, block_spmm_global,
+                            gather_rows, pack_block, plan_buckets,
+                            round_bucket, seed_batches)
+from repro.train.gnn import _acc, _xent
+
+Array = Any
+
+__all__ = ["train_gnn_minibatch", "MinibatchTrainResult",
+           "layerwise_inference", "MB_ARCHS"]
+
+MB_ARCHS = ("sage-sum", "sage-mean", "sage-max", "gin")
+
+
+@dataclasses.dataclass
+class MinibatchTrainResult:
+    arch: str
+    dataset: str
+    use_isplib: bool
+    fanouts: tuple
+    batch_size: int
+    losses: list
+    train_acc: float
+    test_acc: float
+    epoch_time_s: float      # mean sampled-training wall-clock per epoch
+    compile_time_s: float    # first (warmup) epoch, includes all retraces
+    infer_time_s: float      # one layer-wise full-neighbor inference pass
+    n_traces: int            # jitted-step compilations after warmup
+    n_buckets: int           # distinct bucket signatures seen
+    plan_kinds: tuple        # kernel kinds the bucket plans picked
+    epochs: int
+
+
+def _block_arch(arch: str):
+    """(aggr-or-None, semiring) for a minibatch-capable arch."""
+    if arch not in MB_ARCHS:
+        raise ValueError(f"minibatch arch must be one of {MB_ARCHS}, "
+                         f"got {arch!r}")
+    if arch == "gin":
+        return None, "sum"
+    aggr = arch.split("-")[1]
+    return aggr, aggr
+
+
+def _make_block_model(arch: str, in_dim: int, hidden: int, out_dim: int,
+                      n_layers: int):
+    """init/apply over a block stack. Params are layer-keyed ('l0', 'l1',
+    ...) with the exact per-layer structure of the full-batch zoo, so
+    minibatch-trained weights serve full-batch apply and vice versa."""
+    aggr, _ = _block_arch(arch)
+    dims = [in_dim] + [hidden] * (n_layers - 1) + [out_dim]
+    init_one = L.init_gin if arch == "gin" else L.init_sage
+
+    def init(key):
+        keys = jax.random.split(key, n_layers)
+        return {f"l{i}": init_one(keys[i], dims[i], dims[i + 1])
+                for i in range(n_layers)}
+
+    def conv(p_l, pb, h):
+        if arch == "gin":
+            return L.gin_conv_block(p_l, pb, h)
+        return L.sage_conv_block(p_l, pb, h, aggr=aggr)
+
+    def apply_blocks(params, pbs, h):
+        for i, pb in enumerate(pbs):
+            h = conv(params[f"l{i}"], pb, h)
+            if i < len(pbs) - 1:
+                h = jax.nn.relu(h)
+        return h
+
+    return init, conv, apply_blocks, dims
+
+
+def layerwise_inference(params, sampler: NeighborSampler, x: Array, *,
+                        arch: str, dims: list[int],
+                        plan_cache: BlockPlanCache,
+                        batch_size: int = 1024,
+                        bucket_base: int = 128) -> Array:
+    """Exact logits for every node, one layer at a time (the DGL
+    inference pattern): layer l is computed for *all* nodes over their
+    *full* neighborhoods before layer l+1 starts, so each node's
+    representation is sampled-noise-free while peak memory stays
+    O(batch x max_deg x K) instead of O(edges x K).
+
+    Blocks ride the same bucket ladder and plan cache as training; the
+    dense operand is the full current-layer matrix, so the ELL plans take
+    the fused-gather path (``kernels/ops.gathered_ell_spmm``)."""
+    aggr, _ = _block_arch(arch)
+    n = sampler.num_nodes
+    n_layers = len(dims) - 1
+
+    @partial(jax.jit, static_argnames=("relu_after",))
+    def infer_layer(p_l, pb, h, relu_after):
+        agg = block_spmm_global(pb, h, aggr or "sum")
+        dst_gids = jnp.take(pb.src_ids, pb.dst_pos, mode="fill",
+                            fill_value=h.shape[0])
+        h_dst = gather_rows(h, dst_gids)
+        if arch == "gin":
+            z = (1.0 + p_l["eps"]) * h_dst + agg
+            z = jax.nn.relu(z @ p_l["w1"] + p_l["b1"])
+            out = z @ p_l["w2"] + p_l["b2"]
+        else:
+            out = (h_dst @ p_l["w_self"] + agg @ p_l["w_neigh"] + p_l["b"])
+        return jax.nn.relu(out) if relu_after else out
+
+    # Full-neighbor blocks depend only on the dst batch, not the layer —
+    # sample/relabel once per batch and reuse across layers. Packing
+    # depends only on the *plan* (never on K), so packed blocks are
+    # memoized per (batch, plan signature): when the per-layer K values
+    # tune to the same plan (the common case) the pack cost is paid once.
+    batches = []
+    for lo in range(0, n, batch_size):
+        dst = np.arange(lo, min(lo + batch_size, n))
+        blk = sampler.full_block(dst)
+        sizes = dict(n_dst=batch_size,
+                     n_src=round_bucket(blk.n_src, base=bucket_base),
+                     nnz=round_bucket(blk.nnz, base=bucket_base))
+        width = round_bucket(int(blk.degrees().max()) if blk.nnz else 1,
+                             base=8)
+        batches.append((dst, blk, sizes, width, {}))
+
+    h = x
+    for li in range(n_layers):
+        rows = []
+        for dst, blk, sizes, width, packed in batches:
+            plan = plan_cache.plan_for(blk, k_hint=h.shape[1], **sizes)
+            psig = (plan.kind, plan.sell_c, plan.sell_sigma)
+            pb = packed.get(psig)
+            if pb is None:
+                pb = packed[psig] = pack_block(blk, plan=plan,
+                                               ell_width=width, **sizes)
+            out = infer_layer(params[f"l{li}"], pb, h,
+                              relu_after=li < n_layers - 1)
+            rows.append(out[: len(dst)])
+        h = jnp.concatenate(rows, axis=0)
+    return h
+
+
+def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
+                        batch_size: int = 256, hidden: int = 128,
+                        epochs: int = 5, lr: float = 1e-2,
+                        weight_decay: float = 5e-4, use_isplib: bool = True,
+                        tune: bool = True, measure_tuning: bool = False,
+                        seed: int = 0, tuning_db: Optional[TuningDB] = None,
+                        mesh=None, bucket_base: int = 128,
+                        infer_batch: int = 1024) -> MinibatchTrainResult:
+    """Neighbor-sampled minibatch training on ``dataset`` (a
+    ``data.graphs.GraphDataset``), one layer per fanout entry.
+
+    ``mesh`` engages the distribution hook: the epoch's seed stream is
+    sharded over the mesh's 'data' axis, capped at the *process* count —
+    this is a host-side loader, so each process walks one shard
+    (``jax.process_index()``); devices within a process share it. On a
+    single host the cap makes every 'data' size degenerate to one shard
+    (the whole seed set), so the path is identical with or without a
+    mesh. Cross-process gradient sync is the ROADMAP follow-up.
+    ``tuning_db`` persists the per-bucket kernel plans (§3.2 amortization
+    applied to the sampled workload)."""
+    from repro.dist.mesh import axis_shard_count
+
+    aggr, semiring = _block_arch(arch)
+    n_layers = len(fanouts)
+    with patched(use_isplib):
+        csr = sp.csr_from_coo(dataset.coo)
+        sampler = NeighborSampler(csr, fanouts, seed=seed)
+        init, conv, apply_blocks, dims = _make_block_model(
+            arch, dataset.num_features, hidden, dataset.num_classes,
+            n_layers)
+        params = init(jax.random.PRNGKey(seed))
+        opt = adamw(lr, weight_decay=weight_decay)
+        opt_state = opt.init(params)
+        plan_cache = BlockPlanCache(semiring=semiring, tune=tune,
+                                    measure=measure_tuning, db=tuning_db)
+
+        x, y = dataset.x, dataset.y
+        train_ids = np.nonzero(np.asarray(dataset.train_mask))[0]
+        num_shards = min(axis_shard_count(mesh, "data"),
+                         jax.process_count()) if mesh is not None else 1
+        shard_index = jax.process_index() % num_shards
+
+        @jax.jit
+        def step(p, s, pbs, seed_ids, n_real):
+            def loss_fn(p):
+                h = gather_rows(x, pbs[0].src_ids)
+                logits = apply_blocks(p, pbs, h)
+                mask = jnp.arange(batch_size) < n_real
+                return _xent(logits, jnp.take(y, seed_ids), mask)
+
+            loss, grads = jax.value_and_grad(loss_fn)(p)
+            updates, s = opt.update(grads, s, p)
+            return apply_updates(p, updates), s, loss
+
+        signatures: set[tuple] = set()
+
+        def run_epoch(epoch: int):
+            nonlocal params, opt_state
+            last = None
+            for bi, (seed_ids, n_real) in enumerate(seed_batches(
+                    train_ids, batch_size, shuffle=True, seed=seed,
+                    epoch=epoch, num_shards=num_shards,
+                    shard_index=shard_index)):
+                blocks = sampler.sample(seed_ids[:n_real],
+                                        round=epoch * 100003 + bi)
+                buckets = plan_buckets(blocks, batch_size=batch_size,
+                                       fanouts=fanouts, base=bucket_base)
+                pbs = []
+                for blk, bk, k in zip(blocks, buckets, dims):
+                    plan = plan_cache.plan_for(blk, n_dst=bk.n_dst,
+                                               n_src=bk.n_src, nnz=bk.nnz,
+                                               k_hint=k)
+                    pbs.append(pack_block(
+                        blk, n_dst=bk.n_dst, n_src=bk.n_src, nnz=bk.nnz,
+                        plan=plan, ell_width=bk.ell_width,
+                        sell_steps=bk.sell_steps))
+                pbs = tuple(pbs)
+                signatures.add(tuple(pb.bucket_signature for pb in pbs))
+                params, opt_state, last = step(params, opt_state, pbs,
+                                               jnp.asarray(seed_ids),
+                                               jnp.asarray(n_real))
+            return last
+
+        t0 = time.perf_counter()
+        loss = run_epoch(0)                      # warmup: compiles buckets
+        jax.block_until_ready(loss)
+        compile_time = time.perf_counter() - t0
+
+        losses = [float(loss)]
+        t0 = time.perf_counter()
+        for ep in range(1, epochs):
+            loss = run_epoch(ep)
+            losses.append(float(loss))
+        jax.block_until_ready(loss)
+        if epochs > 1:
+            epoch_time = (time.perf_counter() - t0) / (epochs - 1)
+        else:           # no post-warmup epoch to time: report the warmup
+            epoch_time = compile_time
+
+        t0 = time.perf_counter()
+        logits = layerwise_inference(params, sampler, x, arch=arch,
+                                     dims=dims, plan_cache=plan_cache,
+                                     batch_size=infer_batch,
+                                     bucket_base=bucket_base)
+        jax.block_until_ready(logits)
+        infer_time = time.perf_counter() - t0
+
+        train_acc = float(_acc(logits, y, dataset.train_mask))
+        test_acc = float(_acc(logits, y, dataset.test_mask))
+
+    return MinibatchTrainResult(
+        arch=arch, dataset=dataset.name, use_isplib=use_isplib,
+        fanouts=tuple(fanouts), batch_size=batch_size, losses=losses,
+        train_acc=train_acc, test_acc=test_acc, epoch_time_s=epoch_time,
+        compile_time_s=compile_time, infer_time_s=infer_time,
+        n_traces=step._cache_size(), n_buckets=len(signatures),
+        plan_kinds=plan_cache.kinds(), epochs=epochs)

@@ -145,6 +145,59 @@ def test_tuning_db_wired_into_cached_graph(tmp_path, rng):
     assert g3.plan.kind == "ell"
 
 
+def test_tuning_db_key_per_semiring(rng):
+    """Measured rows are keyed (graph, K, semiring); sum keeps the legacy
+    suffix-free key so pre-existing DB rows still resolve."""
+    a = _graph(rng)
+    k_sum = TuningDB.key(a, 128)
+    assert TuningDB.key(a, 128, semiring="sum") == k_sum
+    k_mean = TuningDB.key(a, 128, semiring="mean")
+    k_max = TuningDB.key(a, 128, semiring="max")
+    assert len({k_sum, k_mean, k_max}) == 3
+    db = TuningDB(path="/dev/null")
+    db._db = {}
+    db.put(a, 128, KernelPlan(kind="ell", k_hint=128), semiring="mean")
+    assert db.get(a, 128) is None
+    assert db.get(a, 128, semiring="mean").kind == "ell"
+
+
+def test_measured_tuning_per_semiring(rng):
+    """mean is timed with its post-scale; max/min (no generated kernels)
+    still come back with a real measured trusted wall-clock."""
+    a = _graph(rng, 128, 128, 2000)
+    p_mean = autotune(a, 128, measure=True, semiring_reduce="mean")
+    assert np.isfinite(p_mean.est_trusted_s) and p_mean.est_trusted_s > 0
+    p_max = autotune(a, 128, measure=True, semiring_reduce="max")
+    assert p_max.kind == "trusted"
+    assert np.isfinite(p_max.est_trusted_s) and p_max.est_trusted_s > 0
+
+
+def test_sigma_candidates_from_degree_histogram(rng):
+    """The σ sweep is derived from the Lorenz-curve knee, not a static
+    set: a skewed graph yields a finite window scaled to its heavy-row
+    count, a regular graph collapses toward the global sort, and the
+    degenerate (empty) graph falls back to the static pair."""
+    # heavy-tailed: 32 hub rows + 4064 near-empty rows
+    deg = np.concatenate([np.full(32, 500), np.ones(4064)])
+    cands = at.sell_sigma_candidates(deg)
+    assert 0 in cands and len(cands) >= 2
+    finite = [s for s in cands if s > 0]
+    assert finite and all(32 <= s < 4096 for s in finite)
+    # regular degrees: no knee worth a window — tiny candidate set
+    reg = at.sell_sigma_candidates(np.full(1024, 7))
+    assert 0 in reg
+    # degenerate
+    assert at.sell_sigma_candidates(np.zeros(0)) == (0, 256)
+    # the full (C, σ) product feeds graph_stats and stays consistent
+    a = _graph(rng, 1024, 1024, 8000)
+    stats = at.graph_stats(a)
+    sigmas = {s for _, s, _ in stats.sell_counts}
+    degrees = np.bincount(np.asarray(a.row)[: a.nse], minlength=a.nrows)
+    assert sigmas == set(at.sell_sigma_candidates(degrees))
+    for c, s, steps in stats.sell_counts:
+        assert steps * c >= a.nse
+
+
 def test_vmem_constraint():
     hw = at.HardwareModel(vmem_bytes=64 * 1024)   # tiny VMEM
     assert not at._vmem_ok(256, 256, 512, hw)

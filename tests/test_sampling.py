@@ -1,0 +1,307 @@
+"""repro.sampling: sampler determinism/bounds/relabeling, edge cases,
+plan-aware packing correctness, bucketed-jit trace bounds, loaders, and the
+minibatch trainer end-to-end."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse as sp
+from repro.sampling import (BlockPlanCache, NeighborSampler, block_spmm,
+                            block_spmm_baseline, block_spmm_global,
+                            pack_block, plan_buckets, round_bucket,
+                            seed_batches, shard_seeds)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    """Small power-law-ish graph + its CSR + dense mirror."""
+    from repro.data import make_dataset
+    ds = make_dataset("reddit", scale=1 / 512, seed=1)
+    csr = sp.csr_from_coo(ds.coo)
+    n = ds.num_nodes
+    dense = np.zeros((n, n), np.float32)
+    r = np.asarray(ds.coo.row)[: ds.coo.nse]
+    c = np.asarray(ds.coo.col)[: ds.coo.nse]
+    dense[r, c] = np.asarray(ds.coo.val)[: ds.coo.nse]
+    return ds, csr, dense
+
+
+# --------------------------------------------------------------------------
+# Sampler
+# --------------------------------------------------------------------------
+
+def test_sampler_deterministic_per_seed_and_round(graph):
+    _, csr, _ = graph
+    seeds = np.arange(24)
+    a = NeighborSampler(csr, (4, 4), seed=7).sample(seeds, round=3)
+    b = NeighborSampler(csr, (4, 4), seed=7).sample(seeds, round=3)
+    for x, y in zip(a, b):
+        assert np.array_equal(x.src_ids, y.src_ids)
+        assert np.array_equal(x.row, y.row)
+        assert np.array_equal(x.col, y.col)
+    # a different seed or round must change the draw
+    c = NeighborSampler(csr, (4, 4), seed=8).sample(seeds, round=3)
+    d = NeighborSampler(csr, (4, 4), seed=7).sample(seeds, round=4)
+    def edges(blks):
+        return [(blk.nnz, blk.col.tolist()) for blk in blks]
+    assert edges(a) != edges(c) or edges(a) != edges(d)
+
+
+@pytest.mark.parametrize("replace", [False, True])
+def test_fanout_bounds(graph, replace):
+    _, csr, _ = graph
+    s = NeighborSampler(csr, (3, 5), seed=0, replace=replace)
+    blocks = s.sample(np.arange(40), round=1)
+    assert blocks[0].degrees().max() <= 3
+    assert blocks[1].degrees().max() <= 5
+    if not replace:
+        # without replacement: per-dst edges are distinct
+        for blk in blocks:
+            key = blk.row.astype(np.int64) * (blk.n_src + 1) + blk.col
+            assert len(np.unique(key)) == blk.nnz
+
+
+def test_relabel_round_trip(graph):
+    """Every block edge maps back to a real graph edge with its value."""
+    _, csr, dense = graph
+    blocks = NeighborSampler(csr, (4, 4), seed=2).sample(np.arange(32))
+    for blk in blocks:
+        g_dst = blk.dst_ids[blk.row]
+        g_src = blk.src_ids[blk.col]
+        np.testing.assert_allclose(dense[g_dst, g_src], blk.val)
+        # dst-prefix invariant
+        assert np.array_equal(blk.src_ids[: blk.n_dst], blk.dst_ids)
+    # chaining invariant: layer i's dst ids are layer i+1's src ids
+    assert np.array_equal(blocks[1].src_ids, blocks[0].dst_ids)
+
+
+def test_empty_frontier(graph):
+    _, csr, _ = graph
+    blocks = NeighborSampler(csr, (4, 4), seed=0).sample(
+        np.array([], np.int64))
+    assert all(b.n_dst == 0 and b.n_src == 0 and b.nnz == 0 for b in blocks)
+
+
+def test_fanout_exceeding_degree_takes_all_edges(graph):
+    """fanout >= degree (no replacement) keeps the full neighborhood —
+    identical edge set to the full-neighbor block."""
+    _, csr, dense = graph
+    seeds = np.arange(16)
+    s = NeighborSampler(csr, (10_000,), seed=0)
+    blk = s.sample(seeds)[0]
+    full = s.full_block(seeds)
+    deg = dense[seeds].astype(bool).sum(axis=1)
+    assert np.array_equal(np.sort(blk.degrees()), np.sort(deg))
+    assert blk.nnz == full.nnz
+    key = lambda b: set(zip(b.dst_ids[b.row].tolist(),
+                            b.src_ids[b.col].tolist()))
+    assert key(blk) == key(full)
+
+
+def test_sample_with_replacement_keeps_duplicates(graph):
+    _, csr, _ = graph
+    s = NeighborSampler(csr, (8,), seed=0, replace=True)
+    blk = s.sample(np.arange(64))[0]
+    # every dst with any in-edge draws exactly `fanout` samples
+    deg = blk.degrees()
+    assert set(np.unique(deg)) <= {0, 8}
+
+
+# --------------------------------------------------------------------------
+# Packing + block SpMM
+# --------------------------------------------------------------------------
+
+def _pack(blk, plan, n_dst=None, n_src=None, nnz=None, **kw):
+    n_dst = n_dst or round_bucket(blk.n_dst, base=8)
+    n_src = n_src or round_bucket(blk.n_src, base=8)
+    nnz = nnz or round_bucket(blk.nnz, base=8)
+    return pack_block(blk, n_dst=n_dst, n_src=n_src, nnz=nnz, plan=plan,
+                      **kw)
+
+
+@pytest.mark.parametrize("kind", ["trusted", "ell", "sell"])
+@pytest.mark.parametrize("reduce", ["sum", "mean"])
+def test_packed_block_spmm_matches_dense(graph, kind, reduce):
+    from repro.core.autotune import KernelPlan
+    _, csr, dense = graph
+    blk = NeighborSampler(csr, (6,), seed=5).sample(np.arange(48))[0]
+    plan = KernelPlan(kind=kind, sell_c=8, sell_sigma=0, k_hint=32)
+    pb = _pack(blk, plan, ell_width=6)
+    h = np.random.default_rng(0).standard_normal(
+        (pb.n_src, 32)).astype(np.float32)
+    sub = np.zeros((pb.n_dst, pb.n_src), np.float32)
+    sub[blk.row, blk.col] = blk.val
+    ref = sub @ h
+    if reduce == "mean":
+        deg = np.zeros(pb.n_dst)
+        np.add.at(deg, blk.row, 1)
+        ref = ref / np.maximum(deg, 1)[:, None]
+    out = np.asarray(block_spmm(pb, jnp.asarray(h), reduce))
+    np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+    base = np.asarray(block_spmm_baseline(pb, jnp.asarray(h), reduce))
+    np.testing.assert_allclose(base, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_block_spmm_max_and_global_path(graph):
+    """Max aggregation (trusted-only semiring) and the fused-gather global
+    dispatch both agree with the dense oracle."""
+    from repro.core.autotune import KernelPlan
+    from repro.core.patch import patched
+    ds, csr, dense = graph
+    blk = NeighborSampler(csr, (5,), seed=9).sample(np.arange(32))[0]
+    pb = _pack(blk, KernelPlan(kind="ell", k_hint=16), ell_width=5)
+    h_full = np.random.default_rng(1).standard_normal(
+        (ds.num_nodes, 16)).astype(np.float32)
+    sub = np.zeros((pb.n_dst, pb.n_src), np.float32)
+    sub[blk.row, blk.col] = blk.val
+    h_src = np.zeros((pb.n_src, 16), np.float32)
+    h_src[: blk.n_src] = h_full[blk.src_ids]
+    # max via the trusted path (plan kind is ignored for non-sum/mean)
+    ref_max = np.zeros((pb.n_dst, 16), np.float32)
+    for i in range(blk.n_dst):
+        cols = blk.col[blk.row == i]
+        vals = blk.val[blk.row == i]
+        if len(cols):
+            ref_max[i] = (h_src[cols] * vals[:, None]).max(axis=0)
+    out = np.asarray(block_spmm(pb, jnp.asarray(h_src), "max"))
+    np.testing.assert_allclose(out, ref_max, rtol=1e-4, atol=1e-4)
+    # fused-gather global dispatch == gather-then-spmm, patched and not
+    for patch_on in (True, False):
+        with patched(patch_on):
+            g = np.asarray(block_spmm_global(pb, jnp.asarray(h_full), "sum"))
+        np.testing.assert_allclose(g, sub @ h_src, rtol=1e-4, atol=1e-4)
+
+
+def test_plan_cache_consults_and_persists_tuning_db(tmp_path, graph):
+    from repro.core.autotune import KernelPlan, TuningDB
+    _, csr, _ = graph
+    blk = NeighborSampler(csr, (4,), seed=0).sample(np.arange(16))[0]
+    db = TuningDB(path=str(tmp_path / "db.json"))
+    cache = BlockPlanCache(semiring="mean", db=db)
+    plan = cache.plan_for(blk, n_dst=16, n_src=64, nnz=64, k_hint=128)
+    assert len(db) == 1
+    # a fresh cache over the same DB short-circuits to the stored row
+    sentinel = KernelPlan(kind="ell", k_hint=128)
+    db2 = TuningDB(path=str(tmp_path / "db.json"))
+    db2.put_key(BlockPlanCache.key(16, 64, 64, 128, "mean"), sentinel)
+    cache2 = BlockPlanCache(semiring="mean", db=db2)
+    assert cache2.plan_for(blk, n_dst=16, n_src=64, nnz=64,
+                           k_hint=128).kind == "ell"
+    assert plan == TuningDB(path=str(tmp_path / "db.json")).get_key(
+        BlockPlanCache.key(16, 64, 64, 128, "mean"))
+
+
+# --------------------------------------------------------------------------
+# Buckets: bounded retracing
+# --------------------------------------------------------------------------
+
+def test_round_bucket_ladder():
+    assert round_bucket(0) == 128 and round_bucket(128) == 128
+    assert round_bucket(129) == 256 and round_bucket(1000) == 1024
+    assert round_bucket(5, base=8) == 8
+    # ladder values are log-many over any range
+    vals = {round_bucket(n, base=8) for n in range(1, 4096)}
+    assert len(vals) <= 10
+
+
+def test_bucketed_shapes_bound_jit_traces(graph):
+    """The core contract: a jitted consumer of packed blocks compiles once
+    per bucket signature, not once per batch."""
+    _, csr, _ = graph
+    s = NeighborSampler(csr, (4, 4), seed=0)
+    cache = BlockPlanCache(semiring="sum")
+
+    @jax.jit
+    def consume(pbs, h):
+        out = block_spmm(pbs[1], block_spmm(pbs[0], h, "sum"), "sum")
+        return out.sum()
+
+    signatures = set()
+    for rnd in range(6):
+        seeds = np.arange(32)
+        blocks = s.sample(seeds, round=rnd)
+        buckets = plan_buckets(blocks, batch_size=32, fanouts=(4, 4))
+        pbs = []
+        for blk, bk in zip(blocks, buckets):
+            plan = cache.plan_for(blk, n_dst=bk.n_dst, n_src=bk.n_src,
+                                  nnz=bk.nnz, k_hint=32)
+            pbs.append(pack_block(blk, n_dst=bk.n_dst, n_src=bk.n_src,
+                                  nnz=bk.nnz, plan=plan,
+                                  ell_width=bk.ell_width,
+                                  sell_steps=bk.sell_steps))
+        signatures.add(tuple(pb.bucket_signature for pb in pbs))
+        h = jnp.ones((pbs[0].n_src, 32), jnp.float32)
+        consume(tuple(pbs), h)
+    assert consume._cache_size() <= len(signatures)
+
+
+def test_bucket_chaining_invariant(graph):
+    _, csr, _ = graph
+    blocks = NeighborSampler(csr, (3, 3, 3), seed=0).sample(np.arange(16))
+    buckets = plan_buckets(blocks, batch_size=16, fanouts=(3, 3, 3))
+    for inner, outer in zip(buckets[1:], buckets[:-1]):
+        assert outer.n_dst == inner.n_src
+
+
+# --------------------------------------------------------------------------
+# Loader + shard hook
+# --------------------------------------------------------------------------
+
+def test_seed_batches_cover_and_pad():
+    ids = np.arange(37)
+    seen = []
+    for chunk, n_real in seed_batches(ids, 16, seed=1, epoch=2):
+        assert chunk.shape == (16,)
+        seen.extend(chunk[:n_real].tolist())
+    assert sorted(seen) == list(range(37))
+    # deterministic per (seed, epoch); different epoch reshuffles
+    a = [c.tolist() for c, _ in seed_batches(ids, 16, seed=1, epoch=2)]
+    b = [c.tolist() for c, _ in seed_batches(ids, 16, seed=1, epoch=2)]
+    c = [c.tolist() for c, _ in seed_batches(ids, 16, seed=1, epoch=3)]
+    assert a == b and a != c
+
+
+def test_sharded_seed_batches_partition_the_epoch():
+    ids = np.arange(50)
+    parts = []
+    for si in range(2):
+        for chunk, n_real in seed_batches(ids, 8, seed=0, epoch=0,
+                                          num_shards=2, shard_index=si):
+            parts.extend(chunk[:n_real].tolist())
+    assert sorted(parts) == list(range(50))
+
+
+def test_shard_seeds_over_mesh_data_axis():
+    from repro.dist.mesh import make_local_mesh
+    mesh = make_local_mesh(data=1, model=1)   # 1-device CPU default
+    shards = shard_seeds(np.arange(10), mesh)
+    assert len(shards) == 1 and np.array_equal(shards[0], np.arange(10))
+
+
+# --------------------------------------------------------------------------
+# Trainer end-to-end (tiny scale — the 1/32 parity run lives in
+# benchmarks/bench_sampling.py)
+# --------------------------------------------------------------------------
+
+def test_minibatch_trainer_learns_and_bounds_traces(graph):
+    from repro.train import train_gnn_minibatch
+    ds, _, _ = graph
+    r = train_gnn_minibatch("sage-mean", ds, fanouts=(4, 4), batch_size=64,
+                            hidden=128, epochs=3, seed=0)
+    assert r.losses[-1] < r.losses[0]
+    assert r.train_acc > 0.5
+    assert r.n_traces <= r.n_buckets
+    assert r.plan_kinds            # bucket plans were actually chosen
+
+
+def test_minibatch_trainer_baseline_path(graph):
+    """use_isplib=False routes block_spmm to the trusted baseline and still
+    trains (the patch()/unpatch() contract extends to sampled training)."""
+    from repro.train import train_gnn_minibatch
+    ds, _, _ = graph
+    r = train_gnn_minibatch("sage-sum", ds, fanouts=(3, 3), batch_size=64,
+                            hidden=32, epochs=2, use_isplib=False, seed=0)
+    assert r.losses[-1] < r.losses[0]
+    assert not r.use_isplib

@@ -63,6 +63,27 @@ def training_table() -> str:
     return "\n".join(lines)
 
 
+def sampling_table() -> str:
+    run = _last_run("sampling")
+    if run is None:
+        return "_no BENCH_sampling.json trajectory committed_"
+    lines = ["| dataset | arch | sampled (s/epoch) | full-batch (s/epoch) | "
+             "test acc (mb / fb) | traces/buckets | plans |",
+             "|---|---|---|---|---|---|---|"]
+    for r in run["rows"]:
+        lines.append(
+            f"| {r['dataset']} (1/{round(1 / r['scale'])}) | {r['arch']} | "
+            f"{r['sampled_s']:.3f} | {r['fullbatch_s']:.3f} | "
+            f"{r['mb_test_acc']:.3f} / {r['fb_test_acc']:.3f} | "
+            f"{r['n_traces']}/{r['n_buckets']} | "
+            f"{', '.join(f'`{p}`' for p in r['plans'])} |")
+    lines.append(f"\n_fanouts {run['rows'][0]['fanouts']}, batch "
+                 f"{run['rows'][0]['batch']}; accuracy from exact "
+                 f"layer-wise full-neighbor inference; run at "
+                 f"`{run['git']}` ({run['ts']})._")
+    return "\n".join(lines)
+
+
 def dist2d_table() -> str:
     run = _last_run("dist2d")
     if run is None:
@@ -83,6 +104,8 @@ def main() -> None:
     print(kernel_table())
     print("\n### End-to-end GNN training (tuned vs uncached baseline)\n")
     print(training_table())
+    print("\n### Minibatch neighbor-sampled training (vs full-batch)\n")
+    print(sampling_table())
     print("\n### Distributed SpMM (1-D bands vs 2-D vertex cut)\n")
     print(dist2d_table())
 
