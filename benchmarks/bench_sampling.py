@@ -9,8 +9,16 @@ Columns: sampled s/epoch (host sampling + packing + device step — the
 honest end-to-end number), full-batch s/epoch, exact layer-wise inference
 time, test accuracies of both trainers, and the trace/bucket counts that
 certify bounded retracing.
+
+When the host exposes >= ``dp_shards`` devices (CI forces 4 via
+XLA_FLAGS), a second pass times the lockstep data-parallel trainer on a
+``data=dp_shards`` mesh — 1-shard vs N-shard epoch time plus the
+per-step gradient-sync wire bytes (fp32 psum and the int8 compressed
+wire) land in BENCH_sampling.json as ``kind='data_parallel'`` rows.
 """
 from __future__ import annotations
+
+import jax
 
 from benchmarks.common import emit
 from repro.data import make_dataset
@@ -19,7 +27,7 @@ from repro.train import train_gnn, train_gnn_minibatch
 
 def run(datasets=("reddit",), scale=1 / 32, archs=("sage-mean",),
         fanouts=(10, 10), batch_size=512, hidden=128, epochs=5,
-        fb_epochs=30) -> list[dict]:
+        fb_epochs=30, dp_shards=2) -> list[dict]:
     rows = []
     for dname in datasets:
         ds = make_dataset(dname, scale=scale)
@@ -42,6 +50,31 @@ def run(datasets=("reddit",), scale=1 / 32, archs=("sage-mean",),
                  f"fb={fb.epoch_time_s:.3f}s;gap={gap:+.3f};"
                  f"traces={mb.n_traces}/{mb.n_buckets};"
                  f"plans={'+'.join(mb.plan_kinds)}")
+            if dp_shards > 1 and len(jax.devices()) >= dp_shards:
+                from repro.dist.mesh import make_data_mesh
+                mesh = make_data_mesh(dp_shards)
+                for wire in ("fp32", "int8"):
+                    dp = train_gnn_minibatch(
+                        arch, ds, fanouts=fanouts, batch_size=batch_size,
+                        hidden=hidden, epochs=epochs, seed=0, mesh=mesh,
+                        grad_sync=wire)
+                    rows.append(dict(
+                        kind="data_parallel", dataset=dname, arch=arch,
+                        scale=scale, shards=dp_shards, wire=wire,
+                        sampled_s=dp.epoch_time_s,
+                        one_shard_s=mb.epoch_time_s,
+                        sync_bytes_per_step=dp.sync_bytes_per_step,
+                        dp_test_acc=dp.test_acc,
+                        n_traces=dp.n_traces, n_buckets=dp.n_buckets))
+                    emit(f"sampling/{dname}/{arch}/dp{dp_shards}-{wire}",
+                         dp.epoch_time_s,
+                         f"1shard={mb.epoch_time_s:.3f}s;"
+                         f"sync={dp.sync_bytes_per_step}B;"
+                         f"acc={dp.test_acc:.3f}")
+            elif dp_shards > 1:
+                print(f"# sampling/{dname}/{arch}: data-parallel pass "
+                      f"skipped ({len(jax.devices())} device(s) < "
+                      f"{dp_shards} shards)", flush=True)
     return rows
 
 

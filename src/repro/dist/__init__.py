@@ -61,14 +61,16 @@ if not hasattr(jax, "shard_map"):
     jax.shard_map = shard_map
 
 from repro.dist.collectives import (compressed_psum, compressed_psum_scatter,
-                                    ring_allgather_matmul)
+                                    ring_allgather_matmul, sync_grads,
+                                    wire_bytes)
 from repro.dist.gnn import (DistGraph, build_dist_graph, comm_volume,
                             distributed_spmm)
 from repro.dist.gnn2d import (Graph2D, comm_volume_2d, distributed_fusedmm_2d,
                               distributed_sddmm_2d, distributed_spmm_2d,
                               partition_2d, scores_to_dense)
-from repro.dist.mesh import (make_grid_mesh, make_local_mesh,
-                             make_production_mesh)
+from repro.dist.mesh import (leading_axis_sharding, make_data_mesh,
+                             make_grid_mesh, make_local_mesh,
+                             make_production_mesh, replicated_sharding)
 from repro.dist.partition import (LM_RULES, batch_shardings, cache_shardings,
                                   param_logical_axes, param_shardings,
                                   state_shardings)
@@ -80,10 +82,12 @@ from repro.dist.sharding import (Rules, _current_mesh, current_rules,
 __all__ = [
     "shard_map",
     "compressed_psum", "compressed_psum_scatter", "ring_allgather_matmul",
+    "sync_grads", "wire_bytes",
     "DistGraph", "build_dist_graph", "distributed_spmm", "comm_volume",
     "Graph2D", "partition_2d", "distributed_spmm_2d", "distributed_sddmm_2d",
     "distributed_fusedmm_2d", "scores_to_dense", "comm_volume_2d",
     "make_grid_mesh", "make_local_mesh", "make_production_mesh",
+    "make_data_mesh", "replicated_sharding", "leading_axis_sharding",
     "LM_RULES", "batch_shardings", "cache_shardings", "param_logical_axes",
     "param_shardings", "state_shardings",
     "pipeline_apply",

@@ -10,7 +10,8 @@ from __future__ import annotations
 import jax
 
 __all__ = ["make_production_mesh", "make_local_mesh", "make_grid_mesh",
-           "axis_shard_count"]
+           "make_data_mesh", "axis_shard_count", "replicated_sharding",
+           "leading_axis_sharding"]
 
 
 def axis_shard_count(mesh, axis: str = "data") -> int:
@@ -42,6 +43,37 @@ def make_local_mesh(data: int = 1, model: int = 1):
     data = min(data, n)
     model = min(model, max(n // data, 1))
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_data_mesh(data: int | None = None, *, model: int = 1):
+    """('data', 'model') mesh with an explicit data-parallel degree.
+
+    The mesh the lockstep minibatch trainer and the shard_map LM step
+    expect: ``data`` shards walk the seed/batch stream in lockstep and
+    psum gradients; ``model`` is along for tensor-parallel composition
+    (params replicate over it in pure data-parallel mode). Defaults to
+    all devices on the data axis."""
+    n = len(jax.devices())
+    data = max(n // model, 1) if data is None else data
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def replicated_sharding(mesh):
+    """Fully-replicated NamedSharding on ``mesh`` — what the trainer uses
+    to ``device_put`` big read-only operands (the feature matrix) once,
+    instead of baking them into every jit trace as constants."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def leading_axis_sharding(mesh, axis: str = "data"):
+    """NamedSharding splitting dim 0 over ``axis`` — the placement for
+    host-stacked per-shard batches feeding a ``shard_map`` over ``axis``
+    (each device holds only its own shard's slice, never the full
+    stack)."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    return NamedSharding(mesh, PartitionSpec(axis))
 
 
 def make_grid_mesh(devices: int | None = None):

@@ -52,9 +52,19 @@ def run_lm(args) -> int:
     mesh = make_local_mesh(data=args.mesh_data, model=args.mesh_model)
     print(f"[lm] {cfg.name} ({cfg.family}) on mesh {dict(mesh.shape)}")
 
-    step_fn, opt = TL.make_train_step(
-        cfg, lr=args.lr, accum=args.accum,
-        compression=args.grad_compression != "none")
+    if args.grad_sync == "shardmap":
+        # explicit data-parallel mode: the step runs under shard_map over
+        # 'data' and the gradient reduce is the hand-written collective
+        # (int8 wire when --grad-compression int8), not GSPMD's
+        assert args.batch % mesh.shape["data"] == 0, \
+            (args.batch, dict(mesh.shape))
+        step_fn, opt = TL.make_data_parallel_step(
+            cfg, mesh, lr=args.lr, accum=args.accum,
+            compression=args.grad_compression != "none")
+    else:
+        step_fn, opt = TL.make_train_step(
+            cfg, lr=args.lr, accum=args.accum,
+            compression=args.grad_compression != "none")
     with mesh:
         state = TL.make_train_state(
             cfg, jax.random.PRNGKey(args.seed), opt,
@@ -138,6 +148,12 @@ def main() -> int:
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--grad-compression", choices=["none", "int8"],
                     default="none")
+    ap.add_argument("--grad-sync", choices=["gspmd", "shardmap"],
+                    default="gspmd",
+                    help="'shardmap' = explicit data-parallel step: "
+                         "shard_map over 'data', grads reduced by the "
+                         "hand-written collective (int8 wire with "
+                         "--grad-compression int8)")
     ap.add_argument("--inject-fault", type=int, default=-1)
     args = ap.parse_args()
     if args.lr is None:

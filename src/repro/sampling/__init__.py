@@ -28,9 +28,12 @@ from repro.core.patch import register_baseline, register_tuned
 from repro.sampling.sampler import Block, NeighborSampler
 from repro.sampling.blocks import (BlockPlanCache, PackedBlock, block_spmm,
                                    block_spmm_baseline, block_spmm_global,
-                                   gather_rows, pack_block)
-from repro.sampling.buckets import LayerBucket, plan_buckets, round_bucket
-from repro.sampling.loader import num_seed_batches, seed_batches, shard_seeds
+                                   gather_rows, pack_block, pad_sell_steps,
+                                   stack_blocks)
+from repro.sampling.buckets import (LayerBucket, merge_buckets, plan_buckets,
+                                    round_bucket)
+from repro.sampling.loader import (num_seed_batches, prefetch, seed_batches,
+                                   shard_seeds)
 
 register_tuned("block_spmm", block_spmm)
 register_baseline("block_spmm", block_spmm_baseline)
@@ -45,10 +48,14 @@ __all__ = [
     "block_spmm_baseline",
     "block_spmm_global",
     "gather_rows",
+    "pad_sell_steps",
+    "stack_blocks",
     "LayerBucket",
     "plan_buckets",
+    "merge_buckets",
     "round_bucket",
     "seed_batches",
     "shard_seeds",
     "num_seed_batches",
+    "prefetch",
 ]

@@ -40,7 +40,8 @@ from repro.sampling.sampler import Block
 Array = Any
 
 __all__ = ["PackedBlock", "pack_block", "BlockPlanCache", "block_spmm",
-           "block_spmm_baseline", "block_spmm_global", "gather_rows"]
+           "block_spmm_baseline", "block_spmm_global", "gather_rows",
+           "pad_sell_steps", "stack_blocks"]
 
 
 @partial(jax.tree_util.register_dataclass,
@@ -176,6 +177,35 @@ def pack_block(block: Block, *, n_dst: int, n_src: int, nnz: int,
         n_dst_real=jnp.asarray(block.n_dst, jnp.int32),
         nnz_real=jnp.asarray(block.nnz, jnp.int32),
         n_dst=n_dst, n_src=n_src, plan_kind=plan.kind)
+
+
+def pad_sell_steps(pb: PackedBlock, n_steps: int) -> PackedBlock:
+    """``pb`` with its SELL packed-step axis padded up to ``n_steps``
+    (inert sentinel steps — see ``_pad_sell_steps``). No-op for non-SELL
+    plans or when already at ``n_steps``."""
+    if pb.sell is None or pb.sell.n_steps >= n_steps:
+        return pb
+    return dataclasses.replace(pb, sell=_pad_sell_steps(pb.sell, n_steps))
+
+
+def stack_blocks(pbs: list[PackedBlock]) -> PackedBlock:
+    """Stack per-shard packed blocks of one layer along a new leading axis.
+
+    The container the data-parallel trainer hands to ``shard_map``: leaf
+    ``i`` of the result is ``stack([shard_0.leaf_i, ...])`` and the static
+    meta is shared, so ``in_specs=P('data')`` splits the stack back into
+    one real block per shard (the shard body squeezes the unit leading
+    axis off). SELL step counts can legitimately differ across shards —
+    they are padded to the shard max first (a ladder value, so the bucket
+    bound on retraces survives); every other static must already agree,
+    which the lockstep bucket merge (``buckets.merge_buckets``) plus the
+    shared per-bucket plan guarantee. Asserted here."""
+    sell_steps = [pb.sell.n_steps for pb in pbs if pb.sell is not None]
+    if sell_steps:
+        pbs = [pad_sell_steps(pb, max(sell_steps)) for pb in pbs]
+    sigs = {pb.bucket_signature for pb in pbs}
+    assert len(sigs) == 1, f"lockstep shards disagree on signature: {sigs}"
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *pbs)
 
 
 # --------------------------------------------------------------------------

@@ -20,7 +20,7 @@ import math
 
 from repro.sampling.sampler import Block
 
-__all__ = ["round_bucket", "LayerBucket", "plan_buckets"]
+__all__ = ["round_bucket", "LayerBucket", "plan_buckets", "merge_buckets"]
 
 
 def round_bucket(n: int, *, base: int = 128, growth: float = 2.0) -> int:
@@ -77,3 +77,25 @@ def plan_buckets(blocks: list[Block], *, batch_size: int,
         out.append(LayerBucket(n_dst=n_dst, n_src=n_src, nnz=nnz,
                                ell_width=width, sell_steps=steps))
     return out
+
+
+def merge_buckets(bucket_lists: list[list[LayerBucket]]) -> list[LayerBucket]:
+    """Unify per-shard bucket stacks into one lockstep stack (field-wise
+    max per layer).
+
+    The data-parallel step runs the *same* compiled program on every
+    shard, so all shards must pack to identical static shapes each step.
+    Taking the max per field preserves the chaining invariant: each
+    shard's ``outer.n_dst`` and ``inner.n_src`` derive from the same level
+    value, so their shard-maxes agree too. Ladder values are closed under
+    max, so the merged stack still takes log-many distinct signatures."""
+    merged = []
+    for layer in zip(*bucket_lists):
+        steps = [b.sell_steps for b in layer if b.sell_steps is not None]
+        merged.append(LayerBucket(
+            n_dst=max(b.n_dst for b in layer),
+            n_src=max(b.n_src for b in layer),
+            nnz=max(b.nnz for b in layer),
+            ell_width=max(b.ell_width for b in layer),
+            sell_steps=max(steps) if steps else None))
+    return merged

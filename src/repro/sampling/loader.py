@@ -9,16 +9,33 @@ Distribution hook: ``shard_seeds`` splits a seed set over the 'data' axis
 of any mesh built by ``repro.dist.mesh`` (round-robin, so R-MAT's id-local
 communities don't skew one shard), and ``seed_batches(..., num_shards=,
 shard_index=)`` makes each data-parallel worker walk only its shard while
-all workers agree on the epoch permutation (same seed -> same shuffle) —
-the single-host trainer and a multi-host launch share this code path.
+all workers agree on the epoch permutation (same seed -> same shuffle).
+
+**Lockstep contract.** Once the training step carries a collective (the
+gradient psum in ``train/gnn_minibatch``), every shard must issue exactly
+the same number of steps per epoch or the odd shard hangs in the psum
+waiting for peers that already finished. Round-robin shard lengths differ
+by up to one, so per-shard *batch counts* can diverge (257 seeds, 2
+shards, batch 128: 2 batches vs 1). ``seed_batches`` therefore pads every
+shard out to the common count — the lockstep tail is a full-size batch
+with ``n_real == 0`` (all-masked loss, zero local gradient, still
+participates in the psum) — and ``num_seed_batches`` is the single source
+of truth for that count, shared by the trainer, the progress/bench
+estimates, and the invariant assertion below.
+
+``prefetch`` is the host/device double-buffer: it runs a (sample + pack)
+generator one item ahead in a background thread so the host prepares
+batch *b+1* while the device executes batch *b*.
 """
 from __future__ import annotations
 
+import queue
+import threading
 from typing import Iterator
 
 import numpy as np
 
-__all__ = ["seed_batches", "shard_seeds", "num_seed_batches"]
+__all__ = ["seed_batches", "shard_seeds", "num_seed_batches", "prefetch"]
 
 
 def shard_seeds(seeds, mesh, *, axis: str = "data") -> list[np.ndarray]:
@@ -31,11 +48,21 @@ def shard_seeds(seeds, mesh, *, axis: str = "data") -> list[np.ndarray]:
     return [seeds[i::n] for i in range(n)]
 
 
-def num_seed_batches(n_seeds: int, batch_size: int,
-                     drop_last: bool = False) -> int:
+def num_seed_batches(n_seeds: int, batch_size: int, drop_last: bool = False,
+                     *, num_shards: int = 1) -> int:
+    """Batches *each shard* yields per epoch under the lockstep contract.
+
+    Without ``drop_last`` the count follows the longest shard
+    (``ceil(ceil(n/shards) / batch)``) — shorter shards pad with
+    ``n_real == 0`` tail batches; with ``drop_last`` it follows the
+    shortest (``floor(floor(n/shards) / batch)``) — longer shards stop
+    early. Either way the count is shard-index-independent, which is what
+    keeps a collective-bearing step deadlock-free."""
+    num_shards = max(int(num_shards), 1)
     if drop_last:
-        return n_seeds // batch_size
-    return -(-n_seeds // batch_size)
+        return (n_seeds // num_shards) // batch_size
+    longest = -(-n_seeds // num_shards)
+    return -(-longest // batch_size)
 
 
 def seed_batches(seeds, batch_size: int, *, shuffle: bool = True,
@@ -44,26 +71,93 @@ def seed_batches(seeds, batch_size: int, *, shuffle: bool = True,
                  ) -> Iterator[tuple[np.ndarray, int]]:
     """Yield ``(padded_seeds, n_real)`` minibatches of seed node ids.
 
-    ``padded_seeds`` always has ``batch_size`` entries — a short tail batch
-    repeats its first seed (sampling stays well-defined on duplicates-free
-    prefixes; the pads are *sliced off* before sampling by the trainer, so
-    the pad convention here only fixes the array shape). The epoch
-    permutation is deterministic per ``(seed, epoch)`` and identical across
-    shards; each shard then walks its ``shard_index``-th round-robin slice,
-    so the union over shards is exactly one pass over ``seeds``."""
+    ``padded_seeds`` always has ``batch_size`` entries — a short (or, under
+    the lockstep contract, empty) tail batch repeats its shard's first seed
+    (sampling stays well-defined on duplicates-free prefixes; the pads are
+    *sliced off* before sampling by the trainer, so the pad convention here
+    only fixes the array shape). The epoch permutation is deterministic per
+    ``(seed, epoch)`` and identical across shards; each shard then walks
+    its ``shard_index``-th round-robin slice, so the union of real seeds
+    over shards is exactly one pass over ``seeds``.
+
+    Lockstep: every shard yields exactly
+    ``num_seed_batches(len(seeds), batch_size, drop_last,
+    num_shards=num_shards)`` batches regardless of ``shard_index`` —
+    shards one seed short of the longest emit an ``n_real == 0`` tail
+    batch instead of skipping it, so a gradient collective in the step
+    never strands one shard.
+    """
     ids = np.asarray(seeds)
     if shuffle:
         rng = np.random.default_rng((int(seed), int(epoch)))
         ids = ids[rng.permutation(len(ids))]
-    if num_shards > 1:
-        ids = ids[shard_index::num_shards]
-    for lo in range(0, len(ids), batch_size):
-        chunk = ids[lo: lo + batch_size]
-        if len(chunk) < batch_size and drop_last:
-            return
+    shard = ids[shard_index::num_shards] if num_shards > 1 else ids
+    n_batches = num_seed_batches(len(ids), batch_size, drop_last,
+                                 num_shards=num_shards)
+    # The lockstep invariant: the common count covers every shard's real
+    # batches (no shard has more work than the count), and under drop_last
+    # every shard can fill the count (no shard has less).
+    real_batches = (len(shard) // batch_size if drop_last
+                    else -(-len(shard) // batch_size))
+    assert (real_batches <= n_batches if not drop_last
+            else real_batches >= n_batches), \
+        (len(ids), num_shards, shard_index, real_batches, n_batches)
+    pad_value = shard[0] if len(shard) else (ids[0] if len(ids) else 0)
+    for b in range(n_batches):
+        chunk = shard[b * batch_size: (b + 1) * batch_size]
         n_real = len(chunk)
         if n_real < batch_size:
-            pad = np.full(batch_size - n_real, chunk[0] if n_real else 0,
-                          ids.dtype)
+            pad = np.full(batch_size - n_real,
+                          chunk[0] if n_real else pad_value, ids.dtype)
             chunk = np.concatenate([chunk, pad])
         yield chunk, n_real
+
+
+_DONE = object()
+
+
+def prefetch(it: Iterator, depth: int = 1) -> Iterator:
+    """Run ``it`` one (or ``depth``) item(s) ahead in a daemon thread.
+
+    The sampled-training double buffer: the generator body (host-side
+    sample + pack, numpy — releases the GIL in its hot loops) executes in
+    the background thread while the consumer's device step runs, so the
+    two no longer alternate serially. Items arrive in order; an exception
+    in the producer re-raises at the consumer's next pull."""
+    q: queue.Queue = queue.Queue(maxsize=max(int(depth), 1))
+    stop = threading.Event()
+
+    def put(entry) -> bool:
+        """Bounded put that gives up once the consumer is gone — a plain
+        q.put would park this thread forever (pinning the buffered batch)
+        when the consumer abandons the generator mid-epoch."""
+        while not stop.is_set():
+            try:
+                q.put(entry, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def work():
+        try:
+            for item in it:
+                if not put((None, item)):
+                    return
+        except BaseException as exc:   # noqa: BLE001 — re-raised at consumer
+            put((exc, None))
+            return
+        put((None, _DONE))
+
+    t = threading.Thread(target=work, daemon=True)
+    t.start()
+    try:
+        while True:
+            exc, item = q.get()
+            if exc is not None:
+                raise exc
+            if item is _DONE:
+                return
+            yield item
+    finally:               # normal exhaustion, consumer error, or GC/close
+        stop.set()

@@ -12,6 +12,17 @@ ladder), not once per batch. Evaluation is exact: layer-wise
 *full-neighbor* inference sweeps every node through each layer in batches,
 so reported accuracy has no sampling noise — only training does.
 
+Data parallelism (``mesh=``) is *lockstep*: the seed stream splits over
+the mesh's 'data' axis under the loader's lockstep contract (equal batch
+counts per shard — see ``sampling/loader.py``), each shard samples and
+packs its own batch on the host (one batch ahead of the device via
+``prefetch`` — the double buffer), and the jitted step runs under
+``shard_map`` with the gradients psum'd over 'data' between
+``value_and_grad`` and ``opt.update`` (``grad_sync='fp32'`` exact, or
+``'int8'`` via ``dist.collectives.compressed_psum`` — the shared-scale
+quantized wire). Parameters and optimizer state stay replicated, so every
+shard applies the identical update and weights never diverge.
+
 Both paths honor the paper's two knobs: ``use_isplib`` flips the
 patch()/unpatch() registry (tuned packed kernels vs trusted segment ops),
 and a ``TuningDB`` persists the per-bucket plan decisions across runs.
@@ -35,16 +46,18 @@ from repro.core.patch import patched
 from repro.models.gnn import layers as L
 from repro.optim import adamw, apply_updates
 from repro.sampling import (BlockPlanCache, NeighborSampler, block_spmm_global,
-                            gather_rows, pack_block, plan_buckets,
-                            round_bucket, seed_batches)
+                            gather_rows, merge_buckets, pack_block,
+                            pad_sell_steps, plan_buckets, prefetch,
+                            round_bucket, seed_batches, stack_blocks)
 from repro.train.gnn import _acc, _xent
 
 Array = Any
 
-__all__ = ["train_gnn_minibatch", "MinibatchTrainResult",
-           "layerwise_inference", "MB_ARCHS"]
+__all__ = ["train_gnn_minibatch", "MinibatchTrainResult", "make_minibatch_step",
+           "layerwise_inference", "MB_ARCHS", "GRAD_SYNC_WIRES"]
 
 MB_ARCHS = ("sage-sum", "sage-mean", "sage-max", "gin")
+GRAD_SYNC_WIRES = ("fp32", "int8")
 
 
 @dataclasses.dataclass
@@ -64,6 +77,9 @@ class MinibatchTrainResult:
     n_buckets: int           # distinct bucket signatures seen
     plan_kinds: tuple        # kernel kinds the bucket plans picked
     epochs: int
+    num_shards: int = 1      # 'data'-axis data-parallel degree
+    grad_sync: str = "fp32"  # gradient-sync wire format ('fp32' | 'int8')
+    sync_bytes_per_step: int = 0   # per-shard gradient bytes on the wire
 
 
 def _block_arch(arch: str):
@@ -104,6 +120,65 @@ def _make_block_model(arch: str, in_dim: int, hidden: int, out_dim: int,
         return h
 
     return init, conv, apply_blocks, dims
+
+
+def make_minibatch_step(apply_blocks, opt, *, batch_size: int, mesh=None,
+                        num_shards: int = 1, grad_sync: str = "fp32"):
+    """Build the jitted minibatch update:
+    ``step(params, opt_state, pbs, seed_ids, n_real, x, y) ->
+    (params, opt_state, loss, grads)``.
+
+    ``x``/``y`` are jit *arguments* (``device_put`` once by the caller),
+    not closure constants — a captured feature matrix would be baked into
+    every bucket trace as a separate copy.
+
+    With ``num_shards > 1`` the step runs under ``shard_map`` over the
+    mesh's 'data' axis: ``pbs``/``seed_ids``/``n_real`` arrive host-stacked
+    with a leading shard axis (``in_specs=P('data')`` deals each shard its
+    own batch; the body squeezes the unit axis off), params/opt state/
+    features are replicated, and the per-shard gradients are reduced with
+    :func:`repro.dist.collectives.sync_grads` — exact fp32 psum by
+    default, the int8 shared-scale wire with ``grad_sync='int8'``. The
+    sync sits between ``value_and_grad`` and ``opt.update`` and
+    differentiates nothing; because the reduced tree is identical on every
+    shard, the replicated params stay bitwise in lockstep. The returned
+    loss is the shard mean; the returned grads are the *synced* tree
+    (handy for tests — the device buffers are lazy either way)."""
+    if grad_sync not in GRAD_SYNC_WIRES:
+        raise ValueError(f"grad_sync must be one of {GRAD_SYNC_WIRES}, "
+                         f"got {grad_sync!r}")
+
+    def update(p, s, pbs, seed_ids, n_real, x, y):
+        def loss_fn(p):
+            h = gather_rows(x, pbs[0].src_ids)
+            logits = apply_blocks(p, pbs, h)
+            mask = jnp.arange(batch_size) < n_real
+            return _xent(logits, jnp.take(y, seed_ids), mask)
+
+        loss, grads = jax.value_and_grad(loss_fn)(p)
+        if num_shards > 1:
+            from repro.dist.collectives import sync_grads
+            grads = sync_grads(grads, "data", wire=grad_sync)
+            loss = jax.lax.pmean(loss, "data")
+        updates, s = opt.update(grads, s, p)
+        return apply_updates(p, updates), s, loss, grads
+
+    if num_shards <= 1:
+        return jax.jit(update)
+
+    assert mesh is not None, "num_shards > 1 needs the mesh"
+    from jax.sharding import PartitionSpec as P
+    from repro.dist import shard_map
+
+    def body(p, s, pbs, seed_ids, n_real, x, y):
+        pbs, seed_ids, n_real = jax.tree_util.tree_map(
+            lambda a: a[0], (pbs, seed_ids, n_real))
+        return update(p, s, pbs, seed_ids, n_real, x, y)
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), P("data"), P("data"), P("data"), P(), P()),
+        out_specs=(P(), P(), P(), P())))
 
 
 def layerwise_inference(params, sampler: NeighborSampler, x: Array, *,
@@ -177,21 +252,33 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
                         weight_decay: float = 5e-4, use_isplib: bool = True,
                         tune: bool = True, measure_tuning: bool = False,
                         seed: int = 0, tuning_db: Optional[TuningDB] = None,
-                        mesh=None, bucket_base: int = 128,
+                        mesh=None, grad_sync: str = "fp32",
+                        double_buffer: bool = True, bucket_base: int = 128,
                         infer_batch: int = 1024) -> MinibatchTrainResult:
     """Neighbor-sampled minibatch training on ``dataset`` (a
     ``data.graphs.GraphDataset``), one layer per fanout entry.
 
-    ``mesh`` engages the distribution hook: the epoch's seed stream is
-    sharded over the mesh's 'data' axis, capped at the *process* count —
-    this is a host-side loader, so each process walks one shard
-    (``jax.process_index()``); devices within a process share it. On a
-    single host the cap makes every 'data' size degenerate to one shard
-    (the whole seed set), so the path is identical with or without a
-    mesh. Cross-process gradient sync is the ROADMAP follow-up.
+    ``mesh`` engages lockstep data parallelism over the mesh's 'data'
+    axis: the seed stream splits into ``mesh.shape['data']`` shards with
+    equal per-shard batch counts (the loader's lockstep contract — short
+    shards pad with ``n_real == 0`` tail batches so the gradient
+    collective never strands a shard), each step samples and packs one
+    batch per shard, and the jitted step runs under ``shard_map`` with
+    gradients psum'd over 'data' before ``opt.update`` (``grad_sync``:
+    ``'fp32'`` exact, ``'int8'`` = the compressed shared-scale wire).
+    Params/optimizer state are replicated and receive the identical
+    update on every shard. This is the single-controller view — the host
+    feeds all shards; a multi-process launch would hand each process its
+    ``jax.process_index()``-th slice of shard indices. Without a mesh (or
+    with ``data == 1``) the path is the plain single-shard jit.
+
+    The host sampler is double-buffered one batch ahead of the device
+    step (``sampling.loader.prefetch``); ``double_buffer=False`` restores
+    the serial alternation (determinism is unaffected either way).
     ``tuning_db`` persists the per-bucket kernel plans (§3.2 amortization
     applied to the sampled workload)."""
-    from repro.dist.mesh import axis_shard_count
+    from repro.dist.mesh import (axis_shard_count, leading_axis_sharding,
+                                 replicated_sharding)
 
     aggr, semiring = _block_arch(arch)
     n_layers = len(fanouts)
@@ -207,51 +294,107 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
         plan_cache = BlockPlanCache(semiring=semiring, tune=tune,
                                     measure=measure_tuning, db=tuning_db)
 
-        x, y = dataset.x, dataset.y
         train_ids = np.nonzero(np.asarray(dataset.train_mask))[0]
-        num_shards = min(axis_shard_count(mesh, "data"),
-                         jax.process_count()) if mesh is not None else 1
-        shard_index = jax.process_index() % num_shards
+        num_shards = axis_shard_count(mesh, "data") if mesh is not None else 1
 
-        @jax.jit
-        def step(p, s, pbs, seed_ids, n_real):
-            def loss_fn(p):
-                h = gather_rows(x, pbs[0].src_ids)
-                logits = apply_blocks(p, pbs, h)
-                mask = jnp.arange(batch_size) < n_real
-                return _xent(logits, jnp.take(y, seed_ids), mask)
+        # device_put the epoch-invariant operands ONCE and thread them as
+        # jit arguments — as closure captures they were numpy constants,
+        # baking a full feature-matrix copy into every bucket trace.
+        if num_shards > 1:
+            rep = replicated_sharding(mesh)
+            x = jax.device_put(jnp.asarray(dataset.x), rep)
+            y = jax.device_put(jnp.asarray(dataset.y), rep)
+            # commit the train state to the replicated placement up front:
+            # the step returns committed-P() outputs, and a first call on
+            # uncommitted arrays would recompile its bucket once
+            params = jax.device_put(params, rep)
+            opt_state = jax.device_put(opt_state, rep)
+            stacked = leading_axis_sharding(mesh, "data")
+        else:
+            x = jax.device_put(jnp.asarray(dataset.x))
+            y = jax.device_put(jnp.asarray(dataset.y))
+            stacked = None
 
-            loss, grads = jax.value_and_grad(loss_fn)(p)
-            updates, s = opt.update(grads, s, p)
-            return apply_updates(p, updates), s, loss
+        step = make_minibatch_step(apply_blocks, opt, batch_size=batch_size,
+                                   mesh=mesh, num_shards=num_shards,
+                                   grad_sync=grad_sync)
 
         signatures: set[tuple] = set()
+
+        def pack_shard(blocks, buckets):
+            pbs = []
+            for blk, bk, k in zip(blocks, buckets, dims):
+                plan = plan_cache.plan_for(blk, n_dst=bk.n_dst,
+                                           n_src=bk.n_src, nnz=bk.nnz,
+                                           k_hint=k)
+                pbs.append(pack_block(
+                    blk, n_dst=bk.n_dst, n_src=bk.n_src, nnz=bk.nnz,
+                    plan=plan, ell_width=bk.ell_width,
+                    sell_steps=bk.sell_steps))
+            return pbs
+
+        def batch_stream(epoch: int):
+            """Host half of the pipeline: sample + bucket + pack one
+            lockstep batch group per step; runs in the prefetch thread.
+            Yields (pbs, seed_ids, n_real, signature)."""
+            shard_iters = [seed_batches(train_ids, batch_size, shuffle=True,
+                                        seed=seed, epoch=epoch,
+                                        num_shards=num_shards,
+                                        shard_index=si)
+                           for si in range(num_shards)]
+            # zip is safe: the lockstep contract makes all iterators equal
+            # length. Shard 0 owns the longest slice, so whenever any
+            # shard has real seeds, shard 0 does too — it is packed first
+            # and therefore the one that tunes a fresh bucket's plan.
+            for bi, group in enumerate(zip(*shard_iters)):
+                shard_blocks = [
+                    sampler.sample(seed_ids[:n_real],
+                                   round=(epoch * 100003 + bi) * num_shards
+                                   + si)
+                    for si, (seed_ids, n_real) in enumerate(group)]
+                buckets = merge_buckets(
+                    [plan_buckets(blocks, batch_size=batch_size,
+                                  fanouts=fanouts, base=bucket_base)
+                     for blocks in shard_blocks])
+                shard_pbs = [pack_shard(blocks, buckets)
+                             for blocks in shard_blocks]
+                if num_shards == 1:
+                    sig = tuple(pb.bucket_signature for pb in shard_pbs[0])
+                    (seed_ids, n_real), = group
+                    yield (tuple(shard_pbs[0]), jnp.asarray(seed_ids),
+                           jnp.asarray(n_real), sig)
+                else:
+                    # unify SELL step counts across shards BEFORE reading
+                    # the signature — the padded count is part of the
+                    # traced shape, so the recorded bucket must match what
+                    # the step actually compiles on
+                    layers = []
+                    for i in range(n_layers):
+                        per = [sp[i] for sp in shard_pbs]
+                        if any(pb.sell is not None for pb in per):
+                            steps = max(pb.sell.n_steps for pb in per)
+                            per = [pad_sell_steps(pb, steps) for pb in per]
+                        layers.append(per)
+                    sig = tuple(per[0].bucket_signature for per in layers)
+                    pbs = tuple(stack_blocks(per) for per in layers)
+                    pbs = jax.device_put(pbs, stacked)
+                    sids = jax.device_put(
+                        jnp.asarray(np.stack([g[0] for g in group])),
+                        stacked)
+                    nrs = jax.device_put(
+                        jnp.asarray([g[1] for g in group]), stacked)
+                    yield pbs, sids, nrs, sig
 
         def run_epoch(epoch: int):
             nonlocal params, opt_state
             last = None
-            for bi, (seed_ids, n_real) in enumerate(seed_batches(
-                    train_ids, batch_size, shuffle=True, seed=seed,
-                    epoch=epoch, num_shards=num_shards,
-                    shard_index=shard_index)):
-                blocks = sampler.sample(seed_ids[:n_real],
-                                        round=epoch * 100003 + bi)
-                buckets = plan_buckets(blocks, batch_size=batch_size,
-                                       fanouts=fanouts, base=bucket_base)
-                pbs = []
-                for blk, bk, k in zip(blocks, buckets, dims):
-                    plan = plan_cache.plan_for(blk, n_dst=bk.n_dst,
-                                               n_src=bk.n_src, nnz=bk.nnz,
-                                               k_hint=k)
-                    pbs.append(pack_block(
-                        blk, n_dst=bk.n_dst, n_src=bk.n_src, nnz=bk.nnz,
-                        plan=plan, ell_width=bk.ell_width,
-                        sell_steps=bk.sell_steps))
-                pbs = tuple(pbs)
-                signatures.add(tuple(pb.bucket_signature for pb in pbs))
-                params, opt_state, last = step(params, opt_state, pbs,
-                                               jnp.asarray(seed_ids),
-                                               jnp.asarray(n_real))
+            stream = batch_stream(epoch)
+            if double_buffer:
+                stream = prefetch(stream)
+            for pbs, sids, nrs, sig in stream:
+                signatures.add(sig)
+                params, opt_state, last, _ = step(params, opt_state, pbs,
+                                                  sids, nrs, x, y)
             return last
 
         t0 = time.perf_counter()
@@ -281,10 +424,18 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
         train_acc = float(_acc(logits, y, dataset.train_mask))
         test_acc = float(_acc(logits, y, dataset.test_mask))
 
+        if num_shards > 1:
+            from repro.dist.collectives import wire_bytes
+            sync_bytes = wire_bytes(params, grad_sync)
+        else:
+            sync_bytes = 0
+
     return MinibatchTrainResult(
         arch=arch, dataset=dataset.name, use_isplib=use_isplib,
         fanouts=tuple(fanouts), batch_size=batch_size, losses=losses,
         train_acc=train_acc, test_acc=test_acc, epoch_time_s=epoch_time,
         compile_time_s=compile_time, infer_time_s=infer_time,
         n_traces=step._cache_size(), n_buckets=len(signatures),
-        plan_kinds=plan_cache.kinds(), epochs=epochs)
+        plan_kinds=plan_cache.kinds(), epochs=epochs,
+        num_shards=num_shards, grad_sync=grad_sync,
+        sync_bytes_per_step=sync_bytes)

@@ -7,7 +7,12 @@ the launcher (and dry-run) feed to ``.lower()``. Features:
   the cell's value while per-device live activations shrink);
 * optional int8+error-feedback gradient quantize/dequantize at the optimizer
   boundary (wire-format of the cross-pod reduce; see optim/compression.py);
-* global-norm clipping, donated state, f32 Adam moments over bf16 params.
+* global-norm clipping, donated state, f32 Adam moments over bf16 params;
+* ``sync_axis``: the explicit data-parallel mode — the step assumes it runs
+  inside a ``shard_map`` over that mesh axis and reduces gradients across it
+  with the hand-written collective (``dist.collectives.sync_grads``; int8
+  shared-scale wire when ``compression=True``) between ``value_and_grad``
+  and the optimizer. ``make_data_parallel_step`` builds the wrapped step.
 """
 from __future__ import annotations
 
@@ -30,8 +35,8 @@ from repro.optim.optimizer import apply_updates
 Array = Any
 
 __all__ = ["TrainState", "make_train_state", "make_train_step",
-           "make_prefill_step", "make_decode_step", "shaped_batch",
-           "shaped_state", "shaped_cache"]
+           "make_data_parallel_step", "make_prefill_step", "make_decode_step",
+           "shaped_batch", "shaped_state", "shaped_cache"]
 
 
 class TrainState(NamedTuple):
@@ -54,8 +59,20 @@ def _split_microbatches(batch: dict, accum: int) -> dict:
 
 def make_train_step(cfg: ModelConfig, *, lr=3e-4, weight_decay: float = 0.1,
                     clip_norm: float = 1.0, accum: int = 1,
-                    compression: bool = False):
-    """Returns (step_fn, opt). step_fn(state, batch) -> (state, metrics)."""
+                    compression: bool = False,
+                    sync_axis: Optional[str] = None):
+    """Returns (step_fn, opt). step_fn(state, batch) -> (state, metrics).
+
+    ``sync_axis`` switches gradient handling to the explicit data-parallel
+    mode: the step must then run inside a ``shard_map`` over that axis
+    (see :func:`make_data_parallel_step`) and reduces the gradient tree
+    across it before ``opt.update`` — exact fp32 psum, or, with
+    ``compression=True``, the int8 shared-scale wire of
+    ``dist.collectives.compressed_psum`` (the hand-written cross-pod
+    collective, not the GSPMD optimizer-boundary emulation). The wire
+    quantizer is stateless, so the error-feedback residuals are left
+    untouched in that mode; EF composes with the ``sync_axis=None``
+    optimizer-boundary path only."""
     opt = adamw(lr, weight_decay=weight_decay, clip_norm=clip_norm,
                 state_dtype=jnp.float32)
 
@@ -88,7 +105,14 @@ def make_train_step(cfg: ModelConfig, *, lr=3e-4, weight_decay: float = 0.1,
         grads = tie_expert_replica_grads(cfg, grads)
 
         ef = state.ef
-        if compression:
+        if sync_axis is not None:
+            from repro.dist.collectives import sync_grads
+            grads = sync_grads(grads, sync_axis,
+                               wire="int8" if compression else "fp32")
+            loss = jax.lax.pmean(loss, sync_axis)
+            metrics = {k: jax.lax.pmean(v, sync_axis)
+                       for k, v in metrics.items()}
+        elif compression:
             qtree, ef = ef_compress_update(grads, ef)
             grads = jax.tree_util.tree_map(
                 lambda qs: int8_decompress(*qs), qtree,
@@ -104,6 +128,36 @@ def make_train_step(cfg: ModelConfig, *, lr=3e-4, weight_decay: float = 0.1,
         return TrainState(params, opt_state, ef), metrics
 
     return step, opt
+
+
+def make_data_parallel_step(cfg: ModelConfig, mesh: Mesh, *,
+                            axis: str = "data", **kw):
+    """``make_train_step`` wrapped in ``shard_map`` over ``mesh``'s
+    ``axis``: state replicated, the batch split on its leading (batch)
+    dim, gradients reduced *inside* the step by the hand-written
+    collective (fp32 psum, or ``compressed_psum`` with
+    ``compression=True``). Returns (step_fn, opt) with the same call
+    contract as ``make_train_step`` — jit (with donation) as usual.
+
+    This is pure data parallelism: parameters replicate over the whole
+    mesh (the 'model' axis carries no tensor-parallel sharding in this
+    mode), which is the configuration whose cross-pod reduce the int8
+    wire is for. The ``axis`` size must divide the batch size (the batch
+    splits on its leading dim, one slice per shard). The model's
+    logical-axis ``shard_constraint`` hints are deactivated inside the
+    body (an empty rule set) — every mesh axis is manual under this
+    shard_map, so GSPMD constraints have nothing left to place."""
+    from repro.dist import shard_map
+    from repro.dist.sharding import Rules, use_rules
+    step, opt = make_train_step(cfg, sync_axis=axis, **kw)
+
+    def body(state, batch):
+        with use_rules(Rules(table={})):
+            return step(state, batch)
+
+    sharded = shard_map(body, mesh=mesh, in_specs=(P(), P(axis)),
+                        out_specs=(P(), P()))
+    return sharded, opt
 
 
 def make_prefill_step(cfg: ModelConfig, capacity: int):

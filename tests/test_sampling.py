@@ -10,8 +10,9 @@ import jax.numpy as jnp
 from repro.core import sparse as sp
 from repro.sampling import (BlockPlanCache, NeighborSampler, block_spmm,
                             block_spmm_baseline, block_spmm_global,
-                            pack_block, plan_buckets, round_bucket,
-                            seed_batches, shard_seeds)
+                            merge_buckets, num_seed_batches, pack_block,
+                            plan_buckets, prefetch, round_bucket,
+                            seed_batches, shard_seeds, stack_blocks)
 
 
 @pytest.fixture(scope="module")
@@ -278,6 +279,97 @@ def test_shard_seeds_over_mesh_data_axis():
     mesh = make_local_mesh(data=1, model=1)   # 1-device CPU default
     shards = shard_seeds(np.arange(10), mesh)
     assert len(shards) == 1 and np.array_equal(shards[0], np.arange(10))
+
+
+def test_lockstep_equal_batch_counts_adversarial():
+    """The deadlock bugfix: every shard yields the SAME number of batches
+    (a collective-bearing step hangs otherwise), the count agrees with
+    num_seed_batches, padded tails carry n_real == 0, and the union of
+    real seeds is still exactly one epoch. 257/2/128 is the motivating
+    case (previously 2 batches vs 1)."""
+    for n in (0, 1, 7, 127, 128, 129, 255, 256, 257, 300):
+        for shards in (1, 2, 3, 4):
+            for bs in (16, 128):
+                counts, seen = [], []
+                for si in range(shards):
+                    batches = list(seed_batches(
+                        np.arange(n), bs, seed=3, epoch=1,
+                        num_shards=shards, shard_index=si))
+                    counts.append(len(batches))
+                    for chunk, n_real in batches:
+                        assert chunk.shape == (bs,)
+                        assert 0 <= n_real <= bs
+                        seen.extend(chunk[:n_real].tolist())
+                assert len(set(counts)) == 1, (n, shards, bs, counts)
+                assert counts[0] == num_seed_batches(n, bs,
+                                                     num_shards=shards)
+                assert sorted(seen) == list(range(n)), (n, shards, bs)
+
+
+def test_lockstep_drop_last_equal_full_batches():
+    """drop_last under the lockstep contract: every shard stops at the
+    SHORTEST shard's full-batch count, and every yielded batch is full."""
+    for n, shards, bs in ((257, 2, 64), (130, 3, 32), (64, 2, 64)):
+        counts = []
+        for si in range(shards):
+            batches = list(seed_batches(np.arange(n), bs, seed=0, epoch=0,
+                                        drop_last=True, num_shards=shards,
+                                        shard_index=si))
+            counts.append(len(batches))
+            assert all(n_real == bs for _, n_real in batches)
+        assert len(set(counts)) == 1, (n, shards, bs, counts)
+        assert counts[0] == num_seed_batches(n, bs, True, num_shards=shards)
+
+
+def test_prefetch_order_and_error_propagation():
+    assert list(prefetch(iter(range(100)))) == list(range(100))
+    assert list(prefetch(iter([]))) == []
+
+    def boom():
+        yield 1
+        raise ValueError("producer died")
+
+    it = prefetch(boom())
+    assert next(it) == 1
+    with pytest.raises(ValueError, match="producer died"):
+        list(it)
+
+
+def test_merge_buckets_fieldwise_max_preserves_chaining(graph):
+    _, csr, _ = graph
+    s = NeighborSampler(csr, (3, 3), seed=0)
+    stacks = [plan_buckets(s.sample(np.arange(lo, lo + 12), round=r),
+                           batch_size=16, fanouts=(3, 3), base=8)
+              for r, lo in enumerate((0, 12, 24))]
+    merged = merge_buckets(stacks)
+    for i, layer in enumerate(merged):
+        assert layer.n_src == max(st[i].n_src for st in stacks)
+        assert layer.nnz == max(st[i].nnz for st in stacks)
+    for inner, outer in zip(merged[1:], merged[:-1]):
+        assert outer.n_dst == inner.n_src
+
+
+def test_stack_blocks_round_trips_shards(graph):
+    """stack_blocks = the lockstep shard container: stacked leaf i equals
+    shard i's leaf, static meta is shared, and mixed SELL step counts are
+    padded to the shard max before stacking."""
+    import jax
+    from repro.core.autotune import KernelPlan
+    _, csr, _ = graph
+    s = NeighborSampler(csr, (4,), seed=0)
+    shards = []
+    for r in range(2):
+        blk = s.sample(np.arange(24), round=r)[0]
+        shards.append(_pack(blk, KernelPlan(kind="sell", sell_c=8, k_hint=16),
+                            n_dst=24, n_src=128, nnz=128))
+    stacked = stack_blocks(shards)
+    assert stacked.n_dst == shards[0].n_dst
+    steps = max(pb.sell.n_steps for pb in shards)
+    for i, pb in enumerate(shards):
+        got = jax.tree_util.tree_map(lambda a: np.asarray(a)[i], stacked)
+        assert got.sell.idx.shape[0] == steps
+        np.testing.assert_array_equal(got.row, np.asarray(pb.row))
+        np.testing.assert_array_equal(got.src_ids, np.asarray(pb.src_ids))
 
 
 # --------------------------------------------------------------------------

@@ -67,20 +67,34 @@ def sampling_table() -> str:
     run = _last_run("sampling")
     if run is None:
         return "_no BENCH_sampling.json trajectory committed_"
+    main = [r for r in run["rows"] if r.get("kind") != "data_parallel"]
+    dp = [r for r in run["rows"] if r.get("kind") == "data_parallel"]
     lines = ["| dataset | arch | sampled (s/epoch) | full-batch (s/epoch) | "
              "test acc (mb / fb) | traces/buckets | plans |",
              "|---|---|---|---|---|---|---|"]
-    for r in run["rows"]:
+    for r in main:
         lines.append(
             f"| {r['dataset']} (1/{round(1 / r['scale'])}) | {r['arch']} | "
             f"{r['sampled_s']:.3f} | {r['fullbatch_s']:.3f} | "
             f"{r['mb_test_acc']:.3f} / {r['fb_test_acc']:.3f} | "
             f"{r['n_traces']}/{r['n_buckets']} | "
             f"{', '.join(f'`{p}`' for p in r['plans'])} |")
-    lines.append(f"\n_fanouts {run['rows'][0]['fanouts']}, batch "
-                 f"{run['rows'][0]['batch']}; accuracy from exact "
+    lines.append(f"\n_fanouts {main[0]['fanouts']}, batch "
+                 f"{main[0]['batch']}; accuracy from exact "
                  f"layer-wise full-neighbor inference; run at "
                  f"`{run['git']}` ({run['ts']})._")
+    if dp:
+        lines.append("\nLockstep data-parallel (grad psum over the 'data' "
+                     "axis; forced-host devices):\n")
+        lines.append("| dataset | shards | wire | s/epoch | 1-shard s/epoch "
+                     "| sync bytes/step | test acc |")
+        lines.append("|---|---|---|---|---|---|---|")
+        for r in dp:
+            lines.append(
+                f"| {r['dataset']} (1/{round(1 / r['scale'])}) | "
+                f"{r['shards']} | {r['wire']} | {r['sampled_s']:.3f} | "
+                f"{r['one_shard_s']:.3f} | {r['sync_bytes_per_step']:,} | "
+                f"{r['dp_test_acc']:.3f} |")
     return "\n".join(lines)
 
 
