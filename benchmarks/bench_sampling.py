@@ -15,6 +15,13 @@ XLA_FLAGS), a second pass times the lockstep data-parallel trainer on a
 ``data=dp_shards`` mesh — 1-shard vs N-shard epoch time plus the
 per-step gradient-sync wire bytes (fp32 psum and the int8 compressed
 wire) land in BENCH_sampling.json as ``kind='data_parallel'`` rows.
+
+A third pass isolates the sampling stage (``kind='sampler'`` rows): the
+host pipeline with the double buffer disabled vs the device-resident
+sampler (``sampler='device'`` — sample+pack+step fused into one jitted
+program), recording epoch time, sample-stage-only time and the trace
+count for each. The acceptance bar is device epoch <= serial-host epoch
+with the sample stage measurably cheaper.
 """
 from __future__ import annotations
 
@@ -75,6 +82,25 @@ def run(datasets=("reddit",), scale=1 / 32, archs=("sage-mean",),
                 print(f"# sampling/{dname}/{arch}: data-parallel pass "
                       f"skipped ({len(jax.devices())} device(s) < "
                       f"{dp_shards} shards)", flush=True)
+            # host-vs-device sampler comparison, both without the host
+            # double buffer so the sampling stage sits on the critical
+            # path it is being measured on
+            for mode in ("host", "device"):
+                sr = train_gnn_minibatch(
+                    arch, ds, fanouts=fanouts, batch_size=batch_size,
+                    hidden=hidden, epochs=epochs, seed=0, sampler=mode,
+                    double_buffer=False)
+                rows.append(dict(
+                    kind="sampler", dataset=dname, arch=arch, scale=scale,
+                    sampler=mode, sampled_s=sr.epoch_time_s,
+                    sample_only_s=sr.sample_time_s,
+                    mb_test_acc=sr.test_acc, n_traces=sr.n_traces,
+                    n_buckets=sr.n_buckets, plans=list(sr.plan_kinds)))
+                emit(f"sampling/{dname}/{arch}/sampler-{mode}",
+                     sr.epoch_time_s,
+                     f"sample={sr.sample_time_s:.3f}s;"
+                     f"traces={sr.n_traces}/{sr.n_buckets};"
+                     f"acc={sr.test_acc:.3f}")
     return rows
 
 

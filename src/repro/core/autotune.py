@@ -158,6 +158,8 @@ _DEFAULT_TILES: tuple = ((128, 128), (256, 128), (128, 256), (64, 128), (32, 128
 # (empty / degree-free) graphs where no histogram exists.
 _SELL_C_VALUES: tuple = (8, 16, 32)
 _SELL_SIGMA_FALLBACK: tuple = (0, 256)
+_SELL_SIGMA_MAX: int = 3     # hard cap on σ candidates per graph — the
+                             # measured sweep times |C| x |σ| variants
 
 
 def sell_sigma_candidates(degrees: np.ndarray,
@@ -170,14 +172,20 @@ def sell_sigma_candidates(degrees: np.ndarray,
     rows carry the graph's "excess" degree. A sort window just covering
     that knee groups the heavy rows without paying a global permutation;
     the candidate set is {0 (global sort), knee window, 4x knee window}
-    clipped to the row count. Degenerate graphs (no rows / no edges) get
-    the static fallback.
+    clipped to the row count and capped at ``_SELL_SIGMA_MAX`` entries.
+    Degenerate histograms are cut short instead of inflating the measured
+    sweep: no rows / no edges gets the static fallback, and a
+    constant-degree graph gets ``(0,)`` alone — every sort window is a
+    no-op permutation there, so the Lorenz knee (which degenerates to row
+    1) would only emit duplicate-effect windows.
     """
     deg = np.asarray(degrees, np.int64)
     n = int(deg.shape[0])
     if n == 0 or deg.sum() == 0:
         return tuple(fallback)
     d = np.sort(deg)[::-1]
+    if d[0] == d[-1]:                                # constant degrees
+        return (0,)
     lorenz = np.cumsum(d) / d.sum()                  # mass of top-i rows
     frac = np.arange(1, n + 1) / n                   # uniform diagonal
     knee = int(np.argmax(lorenz - frac)) + 1         # rows holding the excess
@@ -186,7 +194,7 @@ def sell_sigma_candidates(degrees: np.ndarray,
     for w in (window, 4 * window):
         if w < n:                                    # >= n degenerates to 0
             cands.add(w)
-    return tuple(sorted(cands))
+    return tuple(sorted(cands))[:_SELL_SIGMA_MAX]
 
 
 def sell_candidates_from_degrees(degrees: np.ndarray,

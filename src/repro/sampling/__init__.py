@@ -11,7 +11,8 @@ Pipeline (one training step):
     seed loader        repro.sampling.loader   shuffled, padded, shardable
         │                                      over the mesh 'data' axis
     k-hop sampler      repro.sampling.sampler  fused, seeded, host-side
-        │
+        │                 (or: device_graph     traced on-device path —
+        │                  + kernels/sample     sample+pack+step one program)
     bucket ladder      repro.sampling.buckets  log-many static shapes
         │
     plan-aware pack    repro.sampling.blocks   ELL/SELL per autotuned
@@ -32,6 +33,8 @@ from repro.sampling.blocks import (BlockPlanCache, PackedBlock, block_spmm,
                                    stack_blocks)
 from repro.sampling.buckets import (LayerBucket, merge_buckets, plan_buckets,
                                     round_bucket)
+from repro.sampling.device_graph import (DeviceGraph, DeviceSampler,
+                                         device_graph_from_csr)
 from repro.sampling.loader import (num_seed_batches, prefetch, seed_batches,
                                    shard_seeds)
 
@@ -41,6 +44,9 @@ register_baseline("block_spmm", block_spmm_baseline)
 __all__ = [
     "Block",
     "NeighborSampler",
+    "DeviceGraph",
+    "DeviceSampler",
+    "device_graph_from_csr",
     "PackedBlock",
     "BlockPlanCache",
     "pack_block",

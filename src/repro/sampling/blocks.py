@@ -235,12 +235,18 @@ class BlockPlanCache:
         return f"block{n_dst}x{n_src}nse{nnz}k{k}sr{semiring}"
 
     def plan_for(self, block: Block, *, n_dst: int, n_src: int, nnz: int,
-                 k_hint: int) -> KernelPlan:
-        ck = (n_dst, n_src, nnz, k_hint, self.semiring)
+                 k_hint: int, sell_ok: bool = True) -> KernelPlan:
+        """``sell_ok=False`` restricts the candidate sweep (analytic and
+        measured) to ELL/trusted — for consumers whose packing cannot
+        build the degree-sorted SELL layout (the device-resident sampler),
+        so they get the measured best of what they can actually run
+        instead of a plan that silently degrades. Restricted plans cache
+        and persist under their own key."""
+        ck = (n_dst, n_src, nnz, k_hint, self.semiring, sell_ok)
         plan = self._plans.get(ck)
         if plan is not None:
             return plan
-        skey = self.key(*ck)
+        skey = self.key(*ck[:5]) + ("" if sell_ok else "nosell")
         if self.db is not None:
             plan = self.db.get_key(skey)
         if plan is None:
@@ -251,7 +257,8 @@ class BlockPlanCache:
                              ncols=n_src, nse=block.nnz)
                 plan = autotune(rep, k_hint, measure=self.measure,
                                 semiring_reduce=self.semiring,
-                                tile_candidates=())
+                                tile_candidates=(),
+                                sell_candidates=None if sell_ok else ())
             else:
                 plan = KernelPlan.trusted(k_hint)
             if self.db is not None:

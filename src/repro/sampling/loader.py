@@ -141,15 +141,22 @@ def prefetch(it: Iterator, depth: int = 1) -> Iterator:
 
     def work():
         try:
-            for item in it:
-                if not put((None, item)):
-                    return
+            try:
+                for item in it:
+                    if not put((None, item)):
+                        return
+            finally:
+                # the worker owns ``it`` — closing it from the consumer
+                # thread would race a generator mid-``next``
+                close = getattr(it, "close", None)
+                if close is not None:
+                    close()
         except BaseException as exc:   # noqa: BLE001 — re-raised at consumer
             put((exc, None))
             return
         put((None, _DONE))
 
-    t = threading.Thread(target=work, daemon=True)
+    t = threading.Thread(target=work, daemon=True, name="repro-prefetch")
     t.start()
     try:
         while True:
@@ -161,3 +168,13 @@ def prefetch(it: Iterator, depth: int = 1) -> Iterator:
             yield item
     finally:               # normal exhaustion, consumer error, or GC/close
         stop.set()
+        # Unblock a producer parked in q.put and reap the thread: without
+        # the drain+join an abandoned epoch (generator ``close()``) leaves
+        # the thread alive until its next 50 ms poll, and a trainer built
+        # in a loop accumulates one leaked thread per abandonment.
+        while True:
+            try:
+                q.get_nowait()
+            except queue.Empty:
+                break
+        t.join(timeout=5.0)

@@ -1,7 +1,9 @@
 from repro.train.gnn import train_gnn, GNNTrainResult
 from repro.train.gnn_minibatch import (train_gnn_minibatch,
                                        MinibatchTrainResult,
-                                       layerwise_inference, MB_ARCHS)
+                                       layerwise_inference, MB_ARCHS,
+                                       SAMPLERS)
 
 __all__ = ["train_gnn", "GNNTrainResult", "train_gnn_minibatch",
-           "MinibatchTrainResult", "layerwise_inference", "MB_ARCHS"]
+           "MinibatchTrainResult", "layerwise_inference", "MB_ARCHS",
+           "SAMPLERS"]

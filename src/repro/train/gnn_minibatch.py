@@ -23,6 +23,20 @@ packs its own batch on the host (one batch ahead of the device via
 quantized wire). Parameters and optimizer state stay replicated, so every
 shard applies the identical update and weights never diverge.
 
+``sampler="device"`` replaces the host half of the pipeline entirely: the
+adjacency is ``device_put`` once (``sampling.device_graph``), sampling +
+relabel + bucket-static packing are traced (``kernels/sample``), and the
+whole sample+pack+step chain compiles into **one** jitted program per
+bucket — there is exactly one bucket, since the device capacities are
+fixed from ``(batch_size, fanouts)``. The host double-buffer thread has
+nothing left to hide on this path and is not used. Lockstep data
+parallelism is preserved by sampling from on-device seed shards with a
+per-shard round counter (``rnd + axis_index('data')``). Restrictions:
+finite fanouts and sum/mean aggregation only (device capacity padding is
+inert under sum — see ``sampling/device_graph.py``); draws come from a
+different (counter-based) RNG stream than the host sampler, so sampled
+edges differ batch-for-batch while the distribution is unchanged.
+
 Both paths honor the paper's two knobs: ``use_isplib`` flips the
 patch()/unpatch() registry (tuned packed kernels vs trusted segment ops),
 and a ``TuningDB`` persists the per-bucket plan decisions across runs.
@@ -54,10 +68,12 @@ from repro.train.gnn import _acc, _xent
 Array = Any
 
 __all__ = ["train_gnn_minibatch", "MinibatchTrainResult", "make_minibatch_step",
-           "layerwise_inference", "MB_ARCHS", "GRAD_SYNC_WIRES"]
+           "make_device_minibatch_step", "layerwise_inference", "MB_ARCHS",
+           "GRAD_SYNC_WIRES", "SAMPLERS"]
 
 MB_ARCHS = ("sage-sum", "sage-mean", "sage-max", "gin")
 GRAD_SYNC_WIRES = ("fp32", "int8")
+SAMPLERS = ("host", "device")
 
 
 @dataclasses.dataclass
@@ -80,6 +96,8 @@ class MinibatchTrainResult:
     num_shards: int = 1      # 'data'-axis data-parallel degree
     grad_sync: str = "fp32"  # gradient-sync wire format ('fp32' | 'int8')
     sync_bytes_per_step: int = 0   # per-shard gradient bytes on the wire
+    sampler: str = "host"    # 'host' numpy pipeline | 'device' traced path
+    sample_time_s: float = 0.0     # sample(+pack) stage, one shard-0 epoch
 
 
 def _block_arch(arch: str):
@@ -181,6 +199,71 @@ def make_minibatch_step(apply_blocks, opt, *, batch_size: int, mesh=None,
         out_specs=(P(), P(), P(), P())))
 
 
+def make_device_minibatch_step(apply_blocks, opt, dev_sampler, *,
+                               batch_size: int, mesh=None,
+                               num_shards: int = 1,
+                               grad_sync: str = "fp32"):
+    """Build the fully-fused device-sampled update:
+    ``step(params, opt_state, seeds, n_real, rnd, x, y) ->
+    (params, opt_state, loss, grads)``.
+
+    The blocks never exist outside the trace: ``dev_sampler.sample_blocks``
+    runs *inside* the jitted program (sampling is integer-only, so taking
+    it outside ``value_and_grad`` just keeps AD away from it — there is
+    nothing to differentiate), and the step's static shapes come from the
+    sampler's fixed capacities, so the whole chain compiles exactly once.
+    Pad seed slots are routed to the ``num_nodes`` sentinel before
+    sampling (degree-0 frontier rows -> inert blocks) and masked out of
+    the loss as on the host path.
+
+    With ``num_shards > 1`` the step runs under ``shard_map`` over 'data'
+    like the host-sampled step, except the per-shard *sampling* also moves
+    inside: every shard offsets the replicated round counter by its
+    ``axis_index('data')``, so the lockstep round formula
+    ``(epoch * 100003 + batch) * num_shards + shard`` from the host path
+    carries over unchanged — shards draw from disjoint counter streams and
+    the gradient psum contract (PR 5) is untouched."""
+    if grad_sync not in GRAD_SYNC_WIRES:
+        raise ValueError(f"grad_sync must be one of {GRAD_SYNC_WIRES}, "
+                         f"got {grad_sync!r}")
+    num_nodes = dev_sampler.graph.num_nodes
+
+    def update(p, s, seeds, n_real, rnd, x, y):
+        mask = jnp.arange(batch_size) < n_real
+        seeds_m = jnp.where(mask, seeds, jnp.int32(num_nodes))
+        pbs = dev_sampler.sample_blocks(seeds_m, rnd)
+
+        def loss_fn(p):
+            h = gather_rows(x, pbs[0].src_ids)
+            logits = apply_blocks(p, pbs, h)
+            return _xent(logits, jnp.take(y, seeds), mask)
+
+        loss, grads = jax.value_and_grad(loss_fn)(p)
+        if num_shards > 1:
+            from repro.dist.collectives import sync_grads
+            grads = sync_grads(grads, "data", wire=grad_sync)
+            loss = jax.lax.pmean(loss, "data")
+        updates, s = opt.update(grads, s, p)
+        return apply_updates(p, updates), s, loss, grads
+
+    if num_shards <= 1:
+        return jax.jit(update)
+
+    assert mesh is not None, "num_shards > 1 needs the mesh"
+    from jax.sharding import PartitionSpec as P
+    from repro.dist import shard_map
+
+    def body(p, s, seeds, n_real, rnd, x, y):
+        seeds, n_real = seeds[0], n_real[0]
+        rnd = rnd + jax.lax.axis_index("data")
+        return update(p, s, seeds, n_real, rnd, x, y)
+
+    return jax.jit(shard_map(
+        body, mesh=mesh,
+        in_specs=(P(), P(), P("data"), P("data"), P(), P(), P()),
+        out_specs=(P(), P(), P(), P())))
+
+
 def layerwise_inference(params, sampler: NeighborSampler, x: Array, *,
                         arch: str, dims: list[int],
                         plan_cache: BlockPlanCache,
@@ -254,7 +337,8 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
                         seed: int = 0, tuning_db: Optional[TuningDB] = None,
                         mesh=None, grad_sync: str = "fp32",
                         double_buffer: bool = True, bucket_base: int = 128,
-                        infer_batch: int = 1024) -> MinibatchTrainResult:
+                        infer_batch: int = 1024,
+                        sampler: str = "host") -> MinibatchTrainResult:
     """Neighbor-sampled minibatch training on ``dataset`` (a
     ``data.graphs.GraphDataset``), one layer per fanout entry.
 
@@ -276,15 +360,33 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
     step (``sampling.loader.prefetch``); ``double_buffer=False`` restores
     the serial alternation (determinism is unaffected either way).
     ``tuning_db`` persists the per-bucket kernel plans (§3.2 amortization
-    applied to the sampled workload)."""
+    applied to the sampled workload).
+
+    ``sampler="device"`` moves the whole sampling stage on-device (see
+    module docstring): the step samples, relabels, packs and trains in one
+    jitted program, ``double_buffer`` is ignored (nothing host-side left
+    to overlap), and the per-bucket plans are still chosen by the same
+    ``BlockPlanCache``/TuningDB sweep, run once on a representative
+    host-sampled batch. Requires finite fanouts and sum/mean aggregation;
+    evaluation (layer-wise inference) stays on the host path."""
     from repro.dist.mesh import (axis_shard_count, leading_axis_sharding,
                                  replicated_sharding)
 
     aggr, semiring = _block_arch(arch)
     n_layers = len(fanouts)
+    if sampler not in SAMPLERS:
+        raise ValueError(f"sampler must be one of {SAMPLERS}, "
+                         f"got {sampler!r}")
+    if sampler == "device":
+        if semiring not in ("sum", "mean"):
+            raise ValueError("sampler='device' supports sum/mean "
+                             "aggregation only (capacity padding is inert "
+                             f"under sum); arch {arch!r} needs {semiring}")
+        if any(f is None for f in fanouts):
+            raise ValueError("sampler='device' needs finite fanouts")
     with patched(use_isplib):
         csr = sp.csr_from_coo(dataset.coo)
-        sampler = NeighborSampler(csr, fanouts, seed=seed)
+        host_sampler = NeighborSampler(csr, fanouts, seed=seed)
         init, conv, apply_blocks, dims = _make_block_model(
             arch, dataset.num_features, hidden, dataset.num_classes,
             n_layers)
@@ -315,11 +417,56 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
             y = jax.device_put(jnp.asarray(dataset.y))
             stacked = None
 
-        step = make_minibatch_step(apply_blocks, opt, batch_size=batch_size,
-                                   mesh=mesh, num_shards=num_shards,
-                                   grad_sync=grad_sync)
+        dev = None
+        if sampler == "device":
+            from repro.sampling import DeviceSampler, device_graph_from_csr
+            dgraph = device_graph_from_csr(csr, mesh=mesh)
+            # probe a few host-sampled batches for the per-hop frontier
+            # scale: the exact worst case (batch * prod(fanouts+1)) pads
+            # every dense layer-0 operand to a size real batches never
+            # reach once neighbor sets overlap. 1.5x the observed max,
+            # clamped to the worst case inside the sampler, keeps the
+            # overflow edge-drop a tail event while the matmuls run at
+            # the observed scale.
+            probe = [host_sampler.sample(
+                train_ids[: min(batch_size, len(train_ids))], round=r)
+                for r in range(3)]
+            n_hops = len(fanouts)
+            src_caps = [int(1.5 * max(p[n_hops - 1 - j].n_src
+                                      for p in probe))
+                        for j in range(n_hops)]
+            dev = DeviceSampler(dgraph, fanouts, batch_size=batch_size,
+                                seed=seed, base=bucket_base,
+                                src_caps=src_caps)
+            # plans come from the same per-bucket sweep the host path runs
+            # (BlockPlanCache -> TuningDB), keyed on the device capacities,
+            # fed one representative host-sampled batch; sell_ok=False
+            # because device packing cannot build the degree-sorted SELL
+            # layout — the sweep measures the best of ELL vs trusted
+            dev.set_plans([
+                plan_cache.plan_for(blk, n_dst=bk.n_dst, n_src=bk.n_src,
+                                    nnz=bk.nnz, k_hint=k, sell_ok=False)
+                for blk, bk, k in zip(probe[0], dev.buckets, dims)])
+            step = make_device_minibatch_step(
+                apply_blocks, opt, dev, batch_size=batch_size, mesh=mesh,
+                num_shards=num_shards, grad_sync=grad_sync)
+        else:
+            step = make_minibatch_step(apply_blocks, opt,
+                                       batch_size=batch_size, mesh=mesh,
+                                       num_shards=num_shards,
+                                       grad_sync=grad_sync)
 
         signatures: set[tuple] = set()
+
+        def seed_groups(epoch: int):
+            """Lockstep per-shard seed batches, zipped (equal lengths by
+            the loader contract)."""
+            shard_iters = [seed_batches(train_ids, batch_size, shuffle=True,
+                                        seed=seed, epoch=epoch,
+                                        num_shards=num_shards,
+                                        shard_index=si)
+                           for si in range(num_shards)]
+            return enumerate(zip(*shard_iters))
 
         def pack_shard(blocks, buckets):
             pbs = []
@@ -337,18 +484,12 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
             """Host half of the pipeline: sample + bucket + pack one
             lockstep batch group per step; runs in the prefetch thread.
             Yields (pbs, seed_ids, n_real, signature)."""
-            shard_iters = [seed_batches(train_ids, batch_size, shuffle=True,
-                                        seed=seed, epoch=epoch,
-                                        num_shards=num_shards,
-                                        shard_index=si)
-                           for si in range(num_shards)]
-            # zip is safe: the lockstep contract makes all iterators equal
-            # length. Shard 0 owns the longest slice, so whenever any
-            # shard has real seeds, shard 0 does too — it is packed first
-            # and therefore the one that tunes a fresh bucket's plan.
-            for bi, group in enumerate(zip(*shard_iters)):
+            # Shard 0 owns the longest slice, so whenever any shard has
+            # real seeds, shard 0 does too — it is packed first and
+            # therefore the one that tunes a fresh bucket's plan.
+            for bi, group in seed_groups(epoch):
                 shard_blocks = [
-                    sampler.sample(seed_ids[:n_real],
+                    host_sampler.sample(seed_ids[:n_real],
                                    round=(epoch * 100003 + bi) * num_shards
                                    + si)
                     for si, (seed_ids, n_real) in enumerate(group)]
@@ -397,15 +538,41 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
                                                   sids, nrs, x, y)
             return last
 
+        def run_epoch_device(epoch: int):
+            """The sampler='device' epoch: the host only feeds seed ids
+            and the round counter — sampling, packing and the update are
+            one jitted call (no prefetch thread: there is no host stage
+            left to overlap with)."""
+            nonlocal params, opt_state
+            last = None
+            for bi, group in seed_groups(epoch):
+                rnd = jnp.int32((epoch * 100003 + bi) * num_shards)
+                if num_shards == 1:
+                    (seed_ids, n_real), = group
+                    sids = jnp.asarray(seed_ids)
+                    nrs = jnp.asarray(n_real)
+                else:
+                    sids = jax.device_put(
+                        jnp.asarray(np.stack([g[0] for g in group])),
+                        stacked)
+                    nrs = jax.device_put(
+                        jnp.asarray([g[1] for g in group]), stacked)
+                signatures.add(dev.signature)
+                params, opt_state, last, _ = step(params, opt_state, sids,
+                                                  nrs, rnd, x, y)
+            return last
+
+        epoch_fn = run_epoch_device if sampler == "device" else run_epoch
+
         t0 = time.perf_counter()
-        loss = run_epoch(0)                      # warmup: compiles buckets
+        loss = epoch_fn(0)                       # warmup: compiles buckets
         jax.block_until_ready(loss)
         compile_time = time.perf_counter() - t0
 
         losses = [float(loss)]
         t0 = time.perf_counter()
         for ep in range(1, epochs):
-            loss = run_epoch(ep)
+            loss = epoch_fn(ep)
             losses.append(float(loss))
         jax.block_until_ready(loss)
         if epochs > 1:
@@ -413,8 +580,42 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
         else:           # no post-warmup epoch to time: report the warmup
             epoch_time = compile_time
 
+        def measure_sample_stage() -> float:
+            """Wall-clock of the sample(+pack) stage alone for one shard-0
+            epoch — host: the numpy sample/bucket/pack loop; device: the
+            jitted ``sample_blocks`` program (compile excluded). The bench
+            compares these to show what moving the stage on-device buys."""
+            batches = list(seed_batches(train_ids, batch_size, shuffle=True,
+                                        seed=seed, epoch=0,
+                                        num_shards=num_shards,
+                                        shard_index=0))
+            if sampler == "device":
+                samp = jax.jit(lambda s, nr, r: dev.sample_blocks(
+                    jnp.where(jnp.arange(batch_size) < nr, s,
+                              jnp.int32(dev.graph.num_nodes)), r))
+                out = samp(jnp.asarray(batches[0][0]),
+                           jnp.asarray(batches[0][1]), jnp.int32(0))
+                jax.block_until_ready(out)
+                t0 = time.perf_counter()
+                for bi, (sids, nr) in enumerate(batches):
+                    out = samp(jnp.asarray(sids), jnp.asarray(nr),
+                               jnp.int32(bi))
+                jax.block_until_ready(out)
+                return time.perf_counter() - t0
+            pbs = None
+            t0 = time.perf_counter()
+            for bi, (sids, nr) in enumerate(batches):
+                blocks = host_sampler.sample(sids[:nr], round=bi)
+                buckets = plan_buckets(blocks, batch_size=batch_size,
+                                       fanouts=fanouts, base=bucket_base)
+                pbs = pack_shard(blocks, buckets)
+            jax.block_until_ready(pbs)
+            return time.perf_counter() - t0
+
+        sample_time = measure_sample_stage()
+
         t0 = time.perf_counter()
-        logits = layerwise_inference(params, sampler, x, arch=arch,
+        logits = layerwise_inference(params, host_sampler, x, arch=arch,
                                      dims=dims, plan_cache=plan_cache,
                                      batch_size=infer_batch,
                                      bucket_base=bucket_base)
@@ -438,4 +639,5 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
         n_traces=step._cache_size(), n_buckets=len(signatures),
         plan_kinds=plan_cache.kinds(), epochs=epochs,
         num_shards=num_shards, grad_sync=grad_sync,
-        sync_bytes_per_step=sync_bytes)
+        sync_bytes_per_step=sync_bytes, sampler=sampler,
+        sample_time_s=sample_time)

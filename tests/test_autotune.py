@@ -207,3 +207,22 @@ def test_vmem_constraint():
 def test_hardware_probe():
     hw = at.probe_hardware()
     assert hw.peak_flops > 0 and hw.hbm_bw > 0 and hw.lane == 128
+
+
+def test_sigma_candidates_capped_and_deduped():
+    """Degenerate degree histograms must not inflate the measured sweep:
+    a constant-degree graph (every sort window is a no-op permutation)
+    collapses to {0}, and the candidate list never exceeds the cap."""
+    assert at.sell_sigma_candidates(np.full(4096, 12)) == (0,)
+    # through graph_stats: a ring (constant degree 1) sweeps |C| variants,
+    # not |C| x |σ|
+    from repro.core import coo_from_edges
+    src = np.arange(64); dst = (src + 1) % 64
+    a = coo_from_edges(src, dst, np.ones(64, np.float32), 64, 64)
+    stats = at.graph_stats(a)
+    assert {s for _, s, _ in stats.sell_counts} == {0}
+    assert len(stats.sell_counts) == len(at._SELL_C_VALUES)
+    rng = np.random.default_rng(0)
+    for _ in range(8):
+        deg = rng.integers(0, 1000, size=int(rng.integers(1, 5000)))
+        assert len(at.sell_sigma_candidates(deg)) <= at._SELL_SIGMA_MAX

@@ -397,3 +397,241 @@ def test_minibatch_trainer_baseline_path(graph):
                             hidden=32, epochs=2, use_isplib=False, seed=0)
     assert r.losses[-1] < r.losses[0]
     assert not r.use_isplib
+
+
+# --------------------------------------------------------------------------
+# Device-resident sampler (sampling.device_graph + kernels/sample)
+# --------------------------------------------------------------------------
+
+def _device_edges(db, num_nodes):
+    """A device block's real edges as a sorted (dst_gid, src_gid, val)
+    list — the order-free view parity is asserted on."""
+    sids = np.asarray(db.src_ids)
+    row, col = np.asarray(db.row), np.asarray(db.col)
+    val = np.asarray(db.val)
+    keep = col < db.n_src                     # col == n_src marks pad slots
+    dst_g = sids[np.asarray(db.dst_pos)[row[keep]]]
+    src_g = sids[col[keep]]
+    return sorted(zip(dst_g.tolist(), src_g.tolist(), val[keep].tolist()))
+
+
+def test_device_sampler_full_neighbor_parity_with_host(graph):
+    """fanout=None consumes no randomness, so device and host must agree
+    exactly: same edge multiset per destination, same real source-id set,
+    ``dst_pos`` self-term mapping consistent (column *order* may differ —
+    device relabel is sorted-unique, host is first-appearance)."""
+    from repro.core.autotune import KernelPlan
+    from repro.sampling import DeviceSampler, NeighborSampler, \
+        device_graph_from_csr
+    _, csr, _ = graph
+    n = int(csr.nrows)
+    seeds = np.random.default_rng(0).permutation(n)[:24]
+    host = NeighborSampler(csr, (None, None), seed=3)
+    dev = DeviceSampler(device_graph_from_csr(csr), (None, None),
+                        batch_size=24, seed=3, base=64)
+    dev.set_plans([KernelPlan.trusted(32)] * 2)
+    dblocks = dev.sample_blocks(jnp.asarray(seeds, jnp.int32), 0)
+    hblocks = host.sample(seeds, round=0)
+    for hb, db in zip(hblocks, dblocks):
+        sids = np.asarray(db.src_ids)
+        assert _device_edges(db, n) == sorted(
+            zip(hb.src_ids[hb.row].tolist(), hb.src_ids[hb.col].tolist(),
+                np.asarray(hb.val).tolist()))
+        assert set(sids[sids < n].tolist()) == set(hb.src_ids.tolist())
+        assert int(np.asarray(db.n_dst_real)) == hb.n_dst
+        # every real dst slot bisects to its own id in the sorted source
+        # set (the deduped-union relabel has no dst prefix to lean on)
+        dpos = np.asarray(db.dst_pos)
+        real = dpos < db.n_src
+        assert real.sum() == hb.n_dst
+        assert (set(sids[dpos[real]].tolist())
+                == set(hb.src_ids[: hb.n_dst].tolist()))
+
+
+def test_device_sampler_bitwise_vs_xla_reference(graph):
+    """Sampled mode: the Pallas kernels (interpret=True on CPU) and the
+    XLA reference produce bitwise-identical blocks — same counter-based
+    hash, elementwise ops, no RNG stream to diverge."""
+    from repro.core.autotune import KernelPlan
+    from repro.sampling import DeviceSampler, device_graph_from_csr
+    _, csr, _ = graph
+    g = device_graph_from_csr(csr)
+    seeds = jnp.asarray(np.random.default_rng(1).permutation(
+        int(csr.nrows))[:16], jnp.int32)
+    outs = []
+    for interpret in (None, True):
+        dev = DeviceSampler(g, (3, 3), batch_size=16, seed=5, base=32,
+                            interpret=interpret)
+        dev.set_plans([KernelPlan.trusted(32)] * 2)
+        outs.append(dev.sample_blocks(seeds, 9))
+    for a, b in zip(jax.tree_util.tree_leaves(outs[0]),
+                    jax.tree_util.tree_leaves(outs[1])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_device_sampler_bounds_validity_determinism(graph):
+    """Sampled draws are real graph edges, fanout-bounded, distinct per
+    destination (without replacement), deterministic per (seeds, round)
+    and different across rounds."""
+    from repro.core.autotune import KernelPlan
+    from repro.sampling import DeviceSampler, device_graph_from_csr
+    _, csr, dense = graph
+    n = int(csr.nrows)
+    g = device_graph_from_csr(csr)
+    seeds = jnp.asarray(np.random.default_rng(2).permutation(n)[:32],
+                        jnp.int32)
+    dev = DeviceSampler(g, (4, 4), batch_size=32, seed=0, base=32)
+    dev.set_plans([KernelPlan.trusted(32)] * 2)
+    b1 = dev.sample_blocks(seeds, 5)
+    b2 = dev.sample_blocks(seeds, 5)
+    b3 = dev.sample_blocks(seeds, 6)
+    leaves = jax.tree_util.tree_leaves
+    for x, y in zip(leaves(b1), leaves(b2)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert any(not np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(leaves(b1), leaves(b3)))
+    for db in b1:
+        assert np.asarray(db.degrees).max() <= 4
+        sids = np.asarray(db.src_ids)
+        dpos = np.asarray(db.dst_pos)
+        row, col = np.asarray(db.row), np.asarray(db.col)
+        keep = col < db.n_src
+        for r, c in zip(row[keep], col[keep]):
+            assert dense[sids[dpos[r]], sids[c]] != 0
+        # without replacement: no duplicate (dst, src) pairs
+        pairs = list(zip(row[keep].tolist(), col[keep].tolist()))
+        assert len(pairs) == len(set(pairs))
+
+
+def test_device_sampler_interpret_smoke():
+    """The CI smoke: tiny graph, 2 hops, forced interpret-mode Pallas —
+    full-neighbor parity with the host sampler and a single jit trace
+    across rounds/seed-batches (the fused sample program is bucket-static).
+    """
+    from repro.core import coo_from_edges
+    from repro.core.autotune import KernelPlan
+    from repro.sampling import DeviceSampler, NeighborSampler, \
+        device_graph_from_csr
+    rng = np.random.default_rng(4)
+    n, m = 12, 40
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    coo = coo_from_edges(src, dst, rng.random(m).astype(np.float32), n, n)
+    csr = sp.csr_from_coo(coo)
+    g = device_graph_from_csr(csr)
+
+    # parity (full-neighbor, interpret=True exercises the Pallas bodies)
+    host = NeighborSampler(csr, (None, None), seed=1)
+    dev = DeviceSampler(g, (None, None), batch_size=4, seed=1, base=8,
+                        interpret=True)
+    dev.set_plans([KernelPlan.trusted(8)] * 2)
+    seeds = np.array([3, 7, 1, 9])
+    dblocks = dev.sample_blocks(jnp.asarray(seeds, jnp.int32), 0)
+    for hb, db in zip(host.sample(seeds, round=0), dblocks):
+        assert _device_edges(db, n) == sorted(
+            zip(hb.src_ids[hb.row].tolist(), hb.src_ids[hb.col].tolist(),
+                np.asarray(hb.val).tolist()))
+
+    # trace count (sampled mode): one compiled program, many rounds
+    dev2 = DeviceSampler(g, (2, 2), batch_size=4, seed=1, base=8,
+                         interpret=True)
+    dev2.set_plans([KernelPlan.trusted(8)] * 2)
+    samp = jax.jit(dev2.sample_blocks)
+    for rnd, lo in ((0, 0), (1, 4), (2, 8)):
+        out = samp(jnp.asarray(np.arange(lo, lo + 4), jnp.int32),
+                   jnp.int32(rnd))
+        assert np.asarray(out[-1].degrees).max() <= 2
+    assert samp._cache_size() == 1
+
+
+def test_device_sampler_capacity_overflow_drops_gracefully(graph):
+    """``src_caps`` below the distinct-frontier count must *drop* the
+    overflowing tail, never mis-map it: every surviving edge is a real
+    graph edge from the right dst, degrees count exactly the survivors,
+    dst slots either bisect to their own id or zero-fill, and the run
+    stays deterministic."""
+    from repro.core.autotune import KernelPlan
+    from repro.sampling import DeviceSampler, device_graph_from_csr
+    _, csr, dense = graph
+    n = int(csr.nrows)
+    dev = DeviceSampler(device_graph_from_csr(csr), (6, 6), batch_size=32,
+                        seed=0, base=8, src_caps=(48, 64))
+    dev.set_plans([KernelPlan.trusted(32)] * 2)
+    # capacities really are below the worst-case bound -> overflow occurs
+    assert dev._hop_dims[0][1] == 48 and dev._hop_dims[1][1] == 64
+    seeds = jnp.asarray(np.random.default_rng(7).permutation(n)[:32],
+                        jnp.int32)
+    b1 = dev.sample_blocks(seeds, 3)
+    b2 = dev.sample_blocks(seeds, 3)
+    for x, y in zip(jax.tree_util.tree_leaves(b1),
+                    jax.tree_util.tree_leaves(b2)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    dropped = 0
+    for db in b1:
+        sids = np.asarray(db.src_ids)
+        dpos = np.asarray(db.dst_pos)
+        col = np.asarray(db.col).reshape(db.n_dst, -1)
+        val = np.asarray(db.val).reshape(db.n_dst, -1)
+        assert np.all(np.diff(sids) >= 0)            # sorted source set
+        # dst slots: own id, or the n_src zero-fill sentinel
+        real_dst = dpos < db.n_src
+        assert np.all(sids[dpos[real_dst]] < n)
+        for i in range(db.n_dst):
+            keep = col[i] < db.n_src
+            np.testing.assert_allclose(np.asarray(db.degrees)[i],
+                                       keep.sum())
+            if real_dst[i]:
+                for c in col[i][keep]:
+                    assert dense[sids[dpos[i]], sids[c]] != 0
+            assert np.all(val[i][~keep] == 0)
+        dropped += int(db.n_dst - real_dst.sum())
+    assert dropped > 0                               # overflow did happen
+
+
+def test_device_trainer_learns_and_bounds_traces(graph):
+    """sampler='device': the sample+pack+step chain is one jitted program
+    (n_traces <= n_buckets == 1), it learns, and it reports a sample-stage
+    time. max aggregation must be rejected (capacity padding is only
+    inert under sum/mean)."""
+    from repro.train import train_gnn_minibatch
+    ds, _, _ = graph
+    r = train_gnn_minibatch("sage-mean", ds, fanouts=(4, 4), batch_size=64,
+                            hidden=128, epochs=3, seed=0, sampler="device")
+    assert r.sampler == "device"
+    assert r.losses[-1] < r.losses[0]
+    assert r.train_acc > 0.5
+    assert r.n_traces <= r.n_buckets == 1
+    assert r.sample_time_s > 0
+    assert r.plan_kinds
+    with pytest.raises(ValueError, match="sum/mean"):
+        train_gnn_minibatch("sage-max", ds, fanouts=(4, 4), batch_size=64,
+                            epochs=1, sampler="device")
+    with pytest.raises(ValueError, match="finite fanouts"):
+        train_gnn_minibatch("sage-mean", ds, fanouts=(None, 4),
+                            batch_size=64, epochs=1, sampler="device")
+
+
+def test_prefetch_close_joins_worker_and_closes_source():
+    """Abandoning a prefetched iterator mid-epoch (generator close()) must
+    reap the worker thread and close the underlying generator — a trainer
+    built in a loop must not accumulate leaked threads."""
+    import threading
+
+    for _ in range(4):
+        closed = []
+
+        def src():
+            try:
+                i = 0
+                while True:
+                    yield i
+                    i += 1
+            finally:
+                closed.append(True)
+
+        it = prefetch(src())
+        assert next(it) == 0
+        it.close()
+        assert closed, "source generator was not closed"
+        assert not [t for t in threading.enumerate()
+                    if t.name == "repro-prefetch"]

@@ -67,8 +67,9 @@ def sampling_table() -> str:
     run = _last_run("sampling")
     if run is None:
         return "_no BENCH_sampling.json trajectory committed_"
-    main = [r for r in run["rows"] if r.get("kind") != "data_parallel"]
+    main = [r for r in run["rows"] if r.get("kind") is None]
     dp = [r for r in run["rows"] if r.get("kind") == "data_parallel"]
+    smp = [r for r in run["rows"] if r.get("kind") == "sampler"]
     lines = ["| dataset | arch | sampled (s/epoch) | full-batch (s/epoch) | "
              "test acc (mb / fb) | traces/buckets | plans |",
              "|---|---|---|---|---|---|---|"]
@@ -95,6 +96,20 @@ def sampling_table() -> str:
                 f"{r['shards']} | {r['wire']} | {r['sampled_s']:.3f} | "
                 f"{r['one_shard_s']:.3f} | {r['sync_bytes_per_step']:,} | "
                 f"{r['dp_test_acc']:.3f} |")
+    if smp:
+        lines.append("\nHost vs device-resident sampling (no double "
+                     "buffer; sample-only = the sample+pack stage "
+                     "alone):\n")
+        lines.append("| dataset | arch | sampler | s/epoch | sample-only "
+                     "s/epoch | traces/buckets | test acc |")
+        lines.append("|---|---|---|---|---|---|---|")
+        for r in smp:
+            lines.append(
+                f"| {r['dataset']} (1/{round(1 / r['scale'])}) | "
+                f"{r['arch']} | {r['sampler']} | {r['sampled_s']:.3f} | "
+                f"{r['sample_only_s']:.3f} | "
+                f"{r['n_traces']}/{r['n_buckets']} | "
+                f"{r['mb_test_acc']:.3f} |")
     return "\n".join(lines)
 
 
