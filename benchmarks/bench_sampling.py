@@ -22,8 +22,15 @@ sampler (``sampler='device'`` — sample+pack+step fused into one jitted
 program), recording epoch time, sample-stage-only time and the trace
 count for each. The acceptance bar is device epoch <= serial-host epoch
 with the sample stage measurably cheaper.
+
+A fourth pass prices fault tolerance (``kind='recovery'`` rows): the
+same run with async checkpointing at a tight cadence vs without, so the
+overhead ratio of the durability the resume path depends on is a
+tracked number rather than folklore.
 """
 from __future__ import annotations
+
+import tempfile
 
 import jax
 
@@ -101,6 +108,24 @@ def run(datasets=("reddit",), scale=1 / 32, archs=("sage-mean",),
                      f"sample={sr.sample_time_s:.3f}s;"
                      f"traces={sr.n_traces}/{sr.n_buckets};"
                      f"acc={sr.test_acc:.3f}")
+            # checkpointing overhead: async saves every 10 steps vs none
+            ckpt_every = 10
+            with tempfile.TemporaryDirectory() as ckdir:
+                ck = train_gnn_minibatch(
+                    arch, ds, fanouts=fanouts, batch_size=batch_size,
+                    hidden=hidden, epochs=epochs, seed=0,
+                    ckpt_dir=ckdir, ckpt_every=ckpt_every)
+            overhead = (ck.epoch_time_s / mb.epoch_time_s
+                        if mb.epoch_time_s > 0 else float("nan"))
+            rows.append(dict(
+                kind="recovery", dataset=dname, arch=arch, scale=scale,
+                ckpt_every=ckpt_every, ckpt_saves=ck.ckpt_saves,
+                plain_s=mb.epoch_time_s, ckpt_s=ck.epoch_time_s,
+                overhead_x=overhead, ck_test_acc=ck.test_acc))
+            emit(f"sampling/{dname}/{arch}/recovery",
+                 ck.epoch_time_s,
+                 f"plain={mb.epoch_time_s:.3f}s;x{overhead:.2f};"
+                 f"saves={ck.ckpt_saves};every={ckpt_every}")
     return rows
 
 

@@ -1,5 +1,6 @@
 from repro.ckpt.checkpointer import (Checkpointer, save_checkpoint,
-                                     restore_checkpoint, latest_step)
+                                     restore_checkpoint, latest_step,
+                                     committed_steps, checkpoint_extra)
 
 __all__ = ["Checkpointer", "save_checkpoint", "restore_checkpoint",
-           "latest_step"]
+           "latest_step", "committed_steps", "checkpoint_extra"]

@@ -28,13 +28,14 @@ import os
 import shutil
 import threading
 import time
+import warnings
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
 __all__ = ["Checkpointer", "save_checkpoint", "restore_checkpoint",
-           "latest_step"]
+           "latest_step", "committed_steps", "checkpoint_extra"]
 
 
 def _step_dir(base: str, step: int) -> str:
@@ -84,45 +85,88 @@ def save_checkpoint(base: str, step: int, tree: Any, *,
     return final
 
 
-def latest_step(base: str) -> Optional[int]:
+def committed_steps(base: str) -> list[int]:
+    """All committed step numbers under ``base``, ascending."""
     if not os.path.isdir(base):
-        return None
+        return []
     steps = []
     for d in os.listdir(base):
         if d.startswith("step_") and not d.endswith(".tmp") and \
                 os.path.exists(os.path.join(base, d, "_COMMITTED")):
             steps.append(int(d.split("_")[1]))
-    return max(steps) if steps else None
+    return sorted(steps)
 
 
-def restore_checkpoint(base: str, tree_like: Any, *, step: Optional[int] = None,
-                       shardings: Any = None) -> tuple[Any, int]:
-    """Restore into the structure of ``tree_like``; re-place onto
-    ``shardings`` (pytree of NamedSharding, e.g. for the CURRENT mesh —
-    the elastic-restart reshard) or default devices."""
+def latest_step(base: str) -> Optional[int]:
+    steps = committed_steps(base)
+    return steps[-1] if steps else None
+
+
+def checkpoint_extra(base: str, step: Optional[int] = None) -> dict:
+    """The ``extra`` metadata dict saved alongside step ``step`` (latest
+    committed step when None) — the side-channel for non-pytree resume
+    state (loader position, loss history, adaptive capacities)."""
     if step is None:
         step = latest_step(base)
         if step is None:
             raise FileNotFoundError(f"no committed checkpoint under {base}")
-    d = _step_dir(base, step)
+    with open(os.path.join(_step_dir(base, step), "manifest.json")) as f:
+        return json.load(f).get("extra", {})
+
+
+def _load_step_dir(d: str, tree_like: Any, shardings: Any):
+    """Load one committed step directory into ``tree_like``'s structure.
+    Raises on any corruption (missing/truncated arrays, bad manifest)."""
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
 
     leaves_like, treedef = jax.tree_util.tree_flatten(tree_like)
-    assert len(leaves_like) == manifest["n_leaves"], \
-        f"leaf count mismatch: {len(leaves_like)} vs {manifest['n_leaves']}"
+    if len(leaves_like) != manifest["n_leaves"]:
+        raise ValueError(
+            f"leaf count mismatch: {len(leaves_like)} vs {manifest['n_leaves']}")
     shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
                     if shardings is not None else [None] * len(leaves_like))
 
     out = []
     for i, (like, sh) in enumerate(zip(leaves_like, shard_leaves)):
         arr = np.load(os.path.join(d, manifest["leaves"][i]["file"]))
-        assert tuple(arr.shape) == tuple(like.shape), \
-            (i, arr.shape, like.shape)
+        if tuple(arr.shape) != tuple(like.shape):
+            raise ValueError(f"leaf {i}: shape {arr.shape} != {like.shape}")
         arr = arr.astype(like.dtype)
         out.append(jax.device_put(arr, sh) if sh is not None
                    else jax.device_put(arr))
-    return jax.tree_util.tree_unflatten(treedef, out), step
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def restore_checkpoint(base: str, tree_like: Any, *, step: Optional[int] = None,
+                       shardings: Any = None) -> tuple[Any, int]:
+    """Restore into the structure of ``tree_like``; re-place onto
+    ``shardings`` (pytree of NamedSharding, e.g. for the CURRENT mesh —
+    the elastic-restart reshard) or default devices.
+
+    With ``step=None`` the restore walks committed steps newest-first and
+    *skips* any step directory whose payload is unreadable (crash-truncated
+    or lost arrays despite the ``_COMMITTED`` marker — e.g. media errors or
+    a partially copied directory), falling back to the previous complete
+    step with a warning. An explicit ``step`` raises instead: the caller
+    asked for that exact state, silently substituting another would be
+    worse than failing."""
+    if step is not None:
+        return _load_step_dir(_step_dir(base, step), tree_like, shardings), step
+    steps = committed_steps(base)
+    if not steps:
+        raise FileNotFoundError(f"no committed checkpoint under {base}")
+    last_err: Optional[Exception] = None
+    for s in reversed(steps):
+        try:
+            return _load_step_dir(_step_dir(base, s), tree_like, shardings), s
+        except (OSError, ValueError, KeyError, EOFError,
+                json.JSONDecodeError) as exc:
+            warnings.warn(f"checkpoint step {s} under {base} is unreadable "
+                          f"({exc}); falling back to the previous step")
+            last_err = exc
+    raise FileNotFoundError(
+        f"no readable checkpoint under {base}") from last_err
 
 
 class Checkpointer:
@@ -167,6 +211,11 @@ class Checkpointer:
         self.wait()
         return restore_checkpoint(self.base, tree_like, step=step,
                                   shardings=shardings)
+
+    def extra(self, step: Optional[int] = None) -> dict:
+        """The ``extra`` metadata of ``step`` (latest when None)."""
+        self.wait()
+        return checkpoint_extra(self.base, step)
 
     def _gc(self) -> None:
         if not os.path.isdir(self.base):

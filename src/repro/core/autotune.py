@@ -50,6 +50,7 @@ import dataclasses
 import json
 import os
 import time
+import warnings
 from typing import Any, Callable, Sequence
 
 import jax
@@ -584,18 +585,56 @@ class TuningDB:
     This is the paper's one-time-tuning amortization: ``build_cached_graph``
     consults the DB before sweeping (and persists what it measures), so the
     expensive ``measure=True`` pass runs once per (graph structure, K) per
-    machine, not once per process."""
+    machine, not once per process.
+
+    On-disk format (``_SCHEMA_VERSION`` 2): ``{"schema": 2, "plans": {...}}``.
+    Legacy flat dicts (pre-schema) still load. A corrupt or
+    incompatible-schema file is *quarantined* — renamed to
+    ``<path>.corrupt`` with a warning — rather than silently discarded, so
+    measured plans are never destroyed without a trace (the quarantined
+    file stays recoverable by hand)."""
+
+    _SCHEMA_VERSION = 2
 
     def __init__(self, path: str | None = None):
         self.path = path or os.environ.get(
             "REPRO_TUNING_DB", os.path.expanduser("~/.repro_tuning.json"))
-        self._db: dict[str, dict] = {}
-        if os.path.exists(self.path):
+        self._db: dict[str, dict] = self._load(self.path)
+
+    @classmethod
+    def _load(cls, path: str) -> dict[str, dict]:
+        if not os.path.exists(path):
+            return {}
+        try:
+            # A zero-length file (fresh touch, or /dev/null used as an
+            # always-empty store) is an empty DB, not corruption.
+            if os.path.getsize(path) == 0:
+                return {}
+            with open(path) as f:
+                raw = json.load(f)
+            if not isinstance(raw, dict):
+                raise ValueError(f"expected a JSON object, got {type(raw)}")
+            if "schema" in raw:
+                if raw["schema"] != cls._SCHEMA_VERSION or \
+                        not isinstance(raw.get("plans"), dict):
+                    raise ValueError(
+                        f"unsupported TuningDB schema {raw.get('schema')!r} "
+                        f"(this build reads {cls._SCHEMA_VERSION})")
+                return raw["plans"]
+            # legacy flat dict-of-plan-dicts (pre-schema format)
+            return raw
+        except (json.JSONDecodeError, ValueError, OSError) as exc:
+            quarantine = path + ".corrupt"
             try:
-                with open(self.path) as f:
-                    self._db = json.load(f)
-            except (json.JSONDecodeError, OSError):
-                self._db = {}
+                os.replace(path, quarantine)
+                where = f"quarantined to {quarantine}"
+            except OSError:
+                where = "left in place"
+            warnings.warn(
+                f"TuningDB at {path} is unreadable ({exc}); {where}. "
+                f"Starting with an empty DB — measured plans in the old "
+                f"file are preserved there, not overwritten.")
+            return {}
 
     def __len__(self) -> int:
         return len(self._db)
@@ -644,8 +683,10 @@ class TuningDB:
 
     def save(self) -> None:
         """Atomically write the DB to ``self.path`` (tmp file + rename, so
-        a crashed run never leaves a half-written store behind)."""
+        a crashed run never leaves a half-written store behind). Writes the
+        versioned ``{"schema": N, "plans": ...}`` envelope."""
         tmp = self.path + ".tmp"
         with open(tmp, "w") as f:
-            json.dump(self._db, f, indent=1)
+            json.dump({"schema": self._SCHEMA_VERSION, "plans": self._db},
+                      f, indent=1)
         os.replace(tmp, self.path)

@@ -24,7 +24,8 @@ import jax.numpy as jnp
 Array = Any
 
 __all__ = ["compressed_psum", "compressed_psum_scatter",
-           "ring_allgather_matmul", "axis_size", "sync_grads", "wire_bytes"]
+           "ring_allgather_matmul", "axis_size", "sync_grads", "wire_bytes",
+           "all_agree"]
 
 
 def axis_size(axis_name: str) -> int:
@@ -37,6 +38,20 @@ def axis_size(axis_name: str) -> int:
         mesh = _current_mesh()
         assert mesh is not None, f"axis {axis_name!r} size is not static"
         return int(mesh.shape[axis_name])
+
+
+def all_agree(flag, axis_name: str):
+    """Collective unanimity bit: True on *every* shard iff ``flag`` is True
+    on every shard of ``axis_name`` (psum of the 0/1 flag equals the axis
+    size).
+
+    This is the lockstep-safe way to make a per-shard go/no-go decision
+    (e.g. the non-finite gradient guard in ``train/gnn_minibatch``): the
+    agreement itself is a collective every shard issues unconditionally, so
+    all shards branch the same way afterwards and no later psum can strand
+    a shard that decided differently. Runs inside a ``shard_map`` body."""
+    n = axis_size(axis_name)
+    return jax.lax.psum(flag.astype(jnp.int32), axis_name) == n
 
 
 def compressed_psum(tree, axis_name: str, *, mean: bool = True):

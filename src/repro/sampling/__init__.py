@@ -35,7 +35,8 @@ from repro.sampling.buckets import (LayerBucket, merge_buckets, plan_buckets,
                                     round_bucket)
 from repro.sampling.device_graph import (DeviceGraph, DeviceSampler,
                                          device_graph_from_csr)
-from repro.sampling.loader import (num_seed_batches, prefetch, seed_batches,
+from repro.sampling.loader import (num_seed_batches, prefetch,
+                                   resilient_prefetch, seed_batches,
                                    shard_seeds)
 
 register_tuned("block_spmm", block_spmm)
@@ -64,4 +65,5 @@ __all__ = [
     "shard_seeds",
     "num_seed_batches",
     "prefetch",
+    "resilient_prefetch",
 ]

@@ -221,7 +221,7 @@ class DeviceSampler:
         return tuple(sig)
 
     # -- one traced hop ---------------------------------------------------
-    def _hop(self, frontier: Array, hop: int, rnd) -> PackedBlock:
+    def _hop(self, frontier: Array, hop: int, rnd):
         g = self.graph
         n_dst, n_src, width = self._hop_dims[hop]
         fanout = tuple(reversed(self.fanouts))[hop]
@@ -264,7 +264,13 @@ class DeviceSampler:
         dok = (frontier < g.num_nodes) & (jnp.take(src_ids, dpos)
                                           == frontier)
         dst_pos = jnp.where(dok, dpos, jnp.int32(n_src))
-        return PackedBlock(
+        # capacity-overflow count: sampled edges whose endpoint (or a dst
+        # id's self term) was truncated out of src_ids by a probed capacity
+        # below this batch's distinct-id reach. Dropped gracefully above
+        # (inert slots) — this is the *surfacing* half of the contract.
+        ovf = (jnp.sum((valid & ~ok).astype(jnp.int32))
+               + jnp.sum(((frontier < g.num_nodes) & ~dok).astype(jnp.int32)))
+        return ovf, PackedBlock(
             src_ids=src_ids,
             dst_pos=dst_pos,
             row=row.ravel(), col=col2d.ravel(), val=val2d.ravel(),
@@ -284,11 +290,21 @@ class DeviceSampler:
         order). ``seeds`` is the static ``(batch_size,)`` int32 vector with
         pad slots already set to the ``num_nodes`` sentinel; ``rnd`` is the
         (traced) round counter. Jit/shard_map-safe throughout."""
+        return self.sample_blocks_stats(seeds, rnd)[0]
+
+    def sample_blocks_stats(self, seeds: Array, rnd):
+        """:meth:`sample_blocks` plus the batch's capacity-overflow count —
+        ``(blocks, ovf)`` where ``ovf`` is the int32 number of sampled
+        edges/self-terms dropped because a probed ``src_caps`` capacity was
+        below this batch's distinct-id reach. The trainer accumulates it
+        per epoch and escalates (re-probes capacities) when nonzero."""
         assert self._plans is not None, "call set_plans() first"
         frontier = seeds.astype(jnp.int32)
         blocks = []
+        ovf = jnp.int32(0)
         for hop in range(len(self.fanouts)):
-            blk = self._hop(frontier, hop, rnd)
+            hop_ovf, blk = self._hop(frontier, hop, rnd)
+            ovf = ovf + hop_ovf
             blocks.append(blk)
             frontier = blk.src_ids
-        return tuple(blocks[::-1])
+        return tuple(blocks[::-1]), ovf

@@ -31,11 +31,12 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Iterator
+from typing import Callable, Iterator, Optional
 
 import numpy as np
 
-__all__ = ["seed_batches", "shard_seeds", "num_seed_batches", "prefetch"]
+__all__ = ["seed_batches", "shard_seeds", "num_seed_batches", "prefetch",
+           "resilient_prefetch"]
 
 
 def shard_seeds(seeds, mesh, *, axis: str = "data") -> list[np.ndarray]:
@@ -178,3 +179,47 @@ def prefetch(it: Iterator, depth: int = 1) -> Iterator:
             except queue.Empty:
                 break
         t.join(timeout=5.0)
+
+
+def resilient_prefetch(make_iter: Callable[[int], Iterator], *,
+                       depth: int = 1, max_restarts: int = 2,
+                       on_restart: Optional[Callable[[int, int, BaseException],
+                                                     None]] = None) -> Iterator:
+    """``prefetch`` with bounded restart of a dead producer thread.
+
+    ``make_iter(start)`` must rebuild the underlying stream beginning at
+    item index ``start`` — the streams here (``seed_batches`` + stateless
+    samplers) are deterministic per (seed, epoch), so "skip the first
+    ``start`` items" reproduces the exact tail the dead worker owed. When
+    the producer raises (sampler bug, transient OOM in the pack, a worker
+    killed mid-epoch), the prefetch pipeline is torn down and rebuilt from
+    the count of items already *delivered*, at most ``max_restarts`` times
+    per stream; the restart budget exhausted, the producer's exception
+    propagates. ``on_restart(n_restarts, delivered, exc)`` observes each
+    recovery (the trainer counts and surfaces them).
+
+    Consumer-side exceptions (thrown into this generator at a ``yield``,
+    e.g. ``close()``) are *not* treated as producer faults: the pull
+    happens inside the try, the yield outside it.
+    """
+    delivered = 0
+    restarts = 0
+    while True:
+        it = prefetch(make_iter(delivered), depth=depth)
+        try:
+            while True:
+                try:
+                    item = next(it)
+                except StopIteration:
+                    return
+                except Exception as exc:
+                    restarts += 1
+                    if restarts > max_restarts:
+                        raise
+                    if on_restart is not None:
+                        on_restart(restarts, delivered, exc)
+                    break          # rebuild the stream from ``delivered``
+                delivered += 1
+                yield item
+        finally:
+            it.close()

@@ -1,0 +1,11 @@
+"""repro.testing — fault-injection harness for the robustness layer.
+
+Test-support code that ships in the package (not under tests/) so the
+fault hooks can be threaded through production entry points
+(``train_gnn_minibatch(faults=...)``) without tests monkeypatching
+internals — the injection points are part of the trainer's contract.
+"""
+from repro.testing.faults import (FaultPlan, InjectedFault, corrupt_file,
+                                  expect_kill)
+
+__all__ = ["FaultPlan", "InjectedFault", "corrupt_file", "expect_kill"]

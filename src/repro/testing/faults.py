@@ -1,0 +1,107 @@
+"""Injectable failures for the fault-tolerance test suite.
+
+A :class:`FaultPlan` is handed to ``train_gnn_minibatch(faults=...)`` and
+fires each configured fault exactly once:
+
+* ``step_exception_at=k`` — raise :class:`InjectedFault` from the host
+  loop just before global step ``k`` executes (the "killed mid-epoch"
+  fault: the checkpoint on disk is whatever the ckpt cadence last saved);
+* ``nan_grad_at=(k, shard)`` — poison the gradient with NaN *inside the
+  traced step* at global step ``k`` on data-parallel shard ``shard``
+  (every shard on a 1-shard mesh). This is the fault the lockstep-safe
+  skip guard must absorb: exactly one shard sees the NaN, yet all shards
+  must agree to skip the step or the gradient psum deadlocks;
+* ``prefetch_death_at=k`` — the producer side of the prefetch pipeline
+  raises before delivering its ``k``-th item (0-based, counted over the
+  whole run, restarts included), exercising ``resilient_prefetch``;
+* ``straggler_at=k`` — sleep ``straggler_delay_s`` before step ``k`` so a
+  :class:`~repro.train.fault_tolerance.StragglerWatchdog` flags it.
+
+Each fault is one-shot: a resumed run that replays past a fired step
+index does not re-fire it (the plan object carries the state, so reuse
+the *same* plan across the kill and the resume — or pass ``faults=None``
+on resume, which the kill/resume tests do).
+
+``nan_grad_at`` changes the jitted step (an extra branch on the step
+index), so clean-vs-injected runs compile different programs; the guard
+itself (``skip_nonfinite``) is always compiled in, keeping the *guarded*
+trainer the thing under test.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Iterator, Optional
+
+__all__ = ["InjectedFault", "FaultPlan", "corrupt_file", "expect_kill"]
+
+
+class InjectedFault(RuntimeError):
+    """Raised by injection points — never by real trainer code, so tests
+    can assert the failure they caused is the failure they caught."""
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """One-shot fault schedule for a ``train_gnn_minibatch`` run."""
+
+    step_exception_at: Optional[int] = None
+    nan_grad_at: Optional[tuple[int, int]] = None   # (global step, shard)
+    prefetch_death_at: Optional[int] = None
+    straggler_at: Optional[int] = None
+    straggler_delay_s: float = 0.25
+
+    def __post_init__(self):
+        self._fired: set = set()
+        self._produced: int = 0       # prefetch items delivered by wrappers
+
+    # -- host-loop injection points ---------------------------------------
+    def before_step(self, gstep: int) -> None:
+        """Called by the trainer before executing global step ``gstep``."""
+        if self.straggler_at == gstep and "straggler" not in self._fired:
+            self._fired.add("straggler")
+            time.sleep(self.straggler_delay_s)
+        if self.step_exception_at == gstep and "kill" not in self._fired:
+            self._fired.add("kill")
+            raise InjectedFault(f"injected step exception at step {gstep}")
+
+    # -- prefetch producer injection --------------------------------------
+    def wrap_stream(self, it: Iterator) -> Iterator:
+        """Wrap a (sample + pack) stream: dies once before producing item
+        ``prefetch_death_at``. The produced-count persists across restarts
+        (the rebuilt stream starts past the already-delivered prefix), so
+        the fault fires at an absolute position in the run, once."""
+        for item in it:
+            if self.prefetch_death_at is not None and \
+                    self._produced == self.prefetch_death_at and \
+                    "prefetch" not in self._fired:
+                self._fired.add("prefetch")
+                raise InjectedFault(
+                    f"injected prefetch death before item {self._produced}")
+            self._produced += 1
+            yield item
+
+
+def corrupt_file(path: str, *, garbage: bytes = b"\x00{not json",
+                 truncate_to: Optional[int] = None) -> None:
+    """Corrupt ``path`` in place: truncate to ``truncate_to`` bytes, or
+    overwrite with non-JSON garbage. For TuningDB-quarantine and
+    crash-truncated-checkpoint tests."""
+    if truncate_to is not None:
+        with open(path, "rb+") as f:
+            f.truncate(truncate_to)
+        return
+    with open(path, "wb") as f:
+        f.write(garbage)
+    os.utime(path)
+
+
+def expect_kill(fn, *args, **kwargs):
+    """Run ``fn`` asserting it dies with :class:`InjectedFault`; returns
+    the exception. The 'kill the run' half of a kill/resume test."""
+    try:
+        fn(*args, **kwargs)
+    except InjectedFault as exc:
+        return exc
+    raise AssertionError("expected an InjectedFault, but the run completed")

@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import Any, Callable, Optional
 
 import jax
@@ -40,7 +41,7 @@ class StepEvent:
 
 class StragglerWatchdog:
     def __init__(self, *, alpha: float = 0.1, threshold: float = 2.0,
-                 escalate_after: int = 3,
+                 escalate_after: int = 3, max_events: int = 512,
                  on_straggler: Optional[Callable[[StepEvent], None]] = None):
         self.alpha = alpha
         self.threshold = threshold
@@ -48,7 +49,11 @@ class StragglerWatchdog:
         self.on_straggler = on_straggler
         self.ema: Optional[float] = None
         self.consecutive = 0
-        self.events: list[StepEvent] = []
+        # bounded: a week-long run observes millions of steps — keep only
+        # the recent window, with lifetime aggregates as plain counters
+        self.events: deque[StepEvent] = deque(maxlen=max_events)
+        self.total_steps = 0
+        self.straggler_count = 0
 
     def observe(self, step: int, wall_s: float) -> StepEvent:
         if self.ema is None:
@@ -61,6 +66,8 @@ class StragglerWatchdog:
         ev = StepEvent(step=step, wall_s=wall_s, ema_s=self.ema,
                        straggler=flagged)
         self.events.append(ev)
+        self.total_steps += 1
+        self.straggler_count += int(flagged)
         if flagged and self.on_straggler:
             self.on_straggler(ev)
         return ev
@@ -110,9 +117,15 @@ class ResilientLoop:
                     raise
                 if self.rebuild_step is not None:
                     self.step_fn = self.rebuild_step()
+                # Resume from the restored checkpoint's own (state, step)
+                # pairing — the emergency save above guarantees a durable
+                # step exists, and the restore's fallback may land on an
+                # *earlier* step than the manifest's latest if the newest
+                # directory is unreadable, so the step must come from the
+                # restore itself, never re-derived from the directory.
                 state, step = self.ckpt.restore(
                     last_good, shardings=self.state_shardings)
-                state, step = state, self._manifest_step()
+                last_good = state
                 continue
             wall = time.perf_counter() - t0
             self.watchdog.observe(step, wall)
@@ -124,8 +137,3 @@ class ResilientLoop:
                 self.ckpt.save(step, state)
         self.ckpt.wait()
         return state, step
-
-    def _manifest_step(self) -> int:
-        from repro.ckpt import latest_step
-        s = latest_step(self.ckpt.base)
-        return s if s is not None else 0

@@ -42,11 +42,32 @@ patch()/unpatch() registry (tuned packed kernels vs trusted segment ops),
 and a ``TuningDB`` persists the per-bucket plan decisions across runs.
 Weights are interchangeable with the full-batch trainer (same param
 pytree), which is what the accuracy-parity acceptance bench relies on.
+
+**Fault tolerance** (``ckpt_dir=``, ``skip_nonfinite=``, ``faults=``):
+long sampled runs survive failures without breaking either determinism or
+the lockstep contract. ``ckpt_dir`` checkpoints ``(params, opt_state)``
+plus the loader position (the global step) through
+``repro.ckpt.Checkpointer``; because every random stream here is
+*stateless* — the epoch permutation is keyed ``(seed, epoch)``, host
+sampler draws by the round counter, device draws by ``(seed, round, hop,
+node, slot)`` — resume is a pure fast-forward: skip the first
+``start_batch`` indices of the restart epoch and the replayed tail is
+bit-for-bit the schedule the killed run would have executed, so a killed
++ resumed run ends with *bitwise-identical* params. The non-finite guard
+skips a poisoned update by a decision that is itself a collective
+(``dist.collectives.all_agree``), so one shard's NaN can never strand the
+others in the gradient psum; the prefetch worker restarts a bounded
+number of times from the delivered-batch count
+(``sampling.loader.resilient_prefetch``); device-sampler capacity
+overflow is counted on device and escalates to doubled capacities at
+epoch end. ``repro.testing.faults`` injects each failure mode for the
+``tests/test_fault_injection.py`` suite.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from functools import partial
 from typing import Any, Optional
 
@@ -60,16 +81,17 @@ from repro.core.patch import patched
 from repro.models.gnn import layers as L
 from repro.optim import adamw, apply_updates
 from repro.sampling import (BlockPlanCache, NeighborSampler, block_spmm_global,
-                            gather_rows, merge_buckets, pack_block,
-                            pad_sell_steps, plan_buckets, prefetch,
-                            round_bucket, seed_batches, stack_blocks)
+                            gather_rows, merge_buckets, num_seed_batches,
+                            pack_block, pad_sell_steps, plan_buckets,
+                            resilient_prefetch, round_bucket, seed_batches,
+                            stack_blocks)
 from repro.train.gnn import _acc, _xent
 
 Array = Any
 
 __all__ = ["train_gnn_minibatch", "MinibatchTrainResult", "make_minibatch_step",
            "make_device_minibatch_step", "layerwise_inference", "MB_ARCHS",
-           "GRAD_SYNC_WIRES", "SAMPLERS"]
+           "GRAD_SYNC_WIRES", "SAMPLERS", "init_step_stats"]
 
 MB_ARCHS = ("sage-sum", "sage-mean", "sage-max", "gin")
 GRAD_SYNC_WIRES = ("fp32", "int8")
@@ -98,6 +120,14 @@ class MinibatchTrainResult:
     sync_bytes_per_step: int = 0   # per-shard gradient bytes on the wire
     sampler: str = "host"    # 'host' numpy pipeline | 'device' traced path
     sample_time_s: float = 0.0     # sample(+pack) stage, one shard-0 epoch
+    # -- fault-tolerance accounting --------------------------------------
+    skipped_steps: int = 0         # updates skipped by the non-finite guard
+    overflow_edges: int = 0        # device-sampler capacity-dropped edges
+    capacity_escalations: int = 0  # device capacity re-probes (doublings)
+    prefetch_restarts: int = 0     # prefetch-worker recoveries
+    resumed_step: int = -1         # global step restored from (-1 = fresh)
+    ckpt_saves: int = 0            # checkpoints written this run
+    final_params: Any = dataclasses.field(default=None, repr=False)
 
 
 def _block_arch(arch: str):
@@ -140,15 +170,79 @@ def _make_block_model(arch: str, in_dim: int, hidden: int, out_dim: int,
     return init, conv, apply_blocks, dims
 
 
+def init_step_stats() -> dict:
+    """Device-resident fault counters the step threads through itself:
+    ``skipped`` (updates vetoed by the non-finite guard) and ``overflow``
+    (device-sampler capacity-dropped edges). Carried as a jit argument so
+    counting costs no per-step host sync — the trainer reads them back
+    once per epoch / checkpoint."""
+    return {"skipped": jnp.int32(0), "overflow": jnp.int32(0)}
+
+
+def _step_tail(opt, p, s, loss, grads, stats, ovf, *, num_shards: int,
+               grad_sync: str, skip_nonfinite: bool, nan_inject, step_idx):
+    """Everything between ``value_and_grad`` and the applied update, shared
+    by the host- and device-sampled steps: optional NaN injection (test
+    harness), the lockstep-safe non-finite guard, the gradient sync, and
+    the guarded parameter/optimizer-state select.
+
+    The guard's order matters: (1) each shard checks its *local*
+    loss+grads for non-finites; (2) the verdict is made global with
+    :func:`~repro.dist.collectives.all_agree` — a collective every shard
+    issues unconditionally, so all shards agree to keep or skip and no
+    later psum can strand a disagreeing shard; (3) poisoned grads are
+    zeroed *before* the sync (the int8 wire's shared scale is a pmax over
+    ``|g|`` — syncing a NaN first would poison every shard); (4) the
+    update is computed unconditionally (same trace either way) and
+    discarded with a ``jnp.where`` select on skip, for params *and*
+    optimizer state (Adam moments must not ingest a skipped step)."""
+    if nan_inject is not None:
+        t_step, t_shard = nan_inject
+        hit = step_idx == jnp.int32(t_step)
+        if num_shards > 1:
+            hit = hit & (jax.lax.axis_index("data") == t_shard)
+        bad = jnp.where(hit, jnp.float32(jnp.nan), jnp.float32(0.0))
+        grads = jax.tree_util.tree_map(
+            lambda g: g + bad.astype(g.dtype), grads)
+    ok = None
+    if skip_nonfinite:
+        ok = jnp.isfinite(loss)
+        for leaf in jax.tree_util.tree_leaves(grads):
+            ok = ok & jnp.all(jnp.isfinite(leaf))
+        if num_shards > 1:
+            from repro.dist.collectives import all_agree
+            ok = all_agree(ok, "data")
+        grads = jax.tree_util.tree_map(
+            lambda g: jnp.where(ok, g, jnp.zeros_like(g)), grads)
+        loss = jnp.where(jnp.isfinite(loss), loss, jnp.zeros_like(loss))
+    if num_shards > 1:
+        from repro.dist.collectives import sync_grads
+        grads = sync_grads(grads, "data", wire=grad_sync)
+        loss = jax.lax.pmean(loss, "data")
+    updates, s_new = opt.update(grads, s, p)
+    p_new = apply_updates(p, updates)
+    skipped = stats["skipped"]
+    if skip_nonfinite:
+        p_new = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(ok, a, b), p_new, p)
+        s_new = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(ok, a, b), s_new, s)
+        skipped = skipped + jnp.where(ok, 0, 1).astype(jnp.int32)
+    stats = {"skipped": skipped, "overflow": stats["overflow"] + ovf}
+    return p_new, s_new, loss, grads, stats
+
+
 def make_minibatch_step(apply_blocks, opt, *, batch_size: int, mesh=None,
-                        num_shards: int = 1, grad_sync: str = "fp32"):
+                        num_shards: int = 1, grad_sync: str = "fp32",
+                        skip_nonfinite: bool = True, nan_inject=None):
     """Build the jitted minibatch update:
-    ``step(params, opt_state, pbs, seed_ids, n_real, x, y) ->
-    (params, opt_state, loss, grads)``.
+    ``step(params, opt_state, pbs, seed_ids, n_real, x, y, step_idx,
+    stats) -> (params, opt_state, loss, grads, stats)``.
 
     ``x``/``y`` are jit *arguments* (``device_put`` once by the caller),
     not closure constants — a captured feature matrix would be baked into
-    every bucket trace as a separate copy.
+    every bucket trace as a separate copy. ``step_idx`` is the (traced)
+    global step counter and ``stats`` the :func:`init_step_stats` carry.
 
     With ``num_shards > 1`` the step runs under ``shard_map`` over the
     mesh's 'data' axis: ``pbs``/``seed_ids``/``n_real`` arrive host-stacked
@@ -161,12 +255,16 @@ def make_minibatch_step(apply_blocks, opt, *, batch_size: int, mesh=None,
     differentiates nothing; because the reduced tree is identical on every
     shard, the replicated params stay bitwise in lockstep. The returned
     loss is the shard mean; the returned grads are the *synced* tree
-    (handy for tests — the device buffers are lazy either way)."""
+    (handy for tests — the device buffers are lazy either way).
+
+    ``skip_nonfinite`` compiles in the lockstep-safe non-finite guard
+    (see :func:`_step_tail`); ``nan_inject=(step, shard)`` is the test
+    harness's gradient-poisoning hook."""
     if grad_sync not in GRAD_SYNC_WIRES:
         raise ValueError(f"grad_sync must be one of {GRAD_SYNC_WIRES}, "
                          f"got {grad_sync!r}")
 
-    def update(p, s, pbs, seed_ids, n_real, x, y):
+    def update(p, s, pbs, seed_ids, n_real, x, y, step_idx, stats):
         def loss_fn(p):
             h = gather_rows(x, pbs[0].src_ids)
             logits = apply_blocks(p, pbs, h)
@@ -174,12 +272,10 @@ def make_minibatch_step(apply_blocks, opt, *, batch_size: int, mesh=None,
             return _xent(logits, jnp.take(y, seed_ids), mask)
 
         loss, grads = jax.value_and_grad(loss_fn)(p)
-        if num_shards > 1:
-            from repro.dist.collectives import sync_grads
-            grads = sync_grads(grads, "data", wire=grad_sync)
-            loss = jax.lax.pmean(loss, "data")
-        updates, s = opt.update(grads, s, p)
-        return apply_updates(p, updates), s, loss, grads
+        return _step_tail(opt, p, s, loss, grads, stats, jnp.int32(0),
+                          num_shards=num_shards, grad_sync=grad_sync,
+                          skip_nonfinite=skip_nonfinite,
+                          nan_inject=nan_inject, step_idx=step_idx)
 
     if num_shards <= 1:
         return jax.jit(update)
@@ -188,24 +284,26 @@ def make_minibatch_step(apply_blocks, opt, *, batch_size: int, mesh=None,
     from jax.sharding import PartitionSpec as P
     from repro.dist import shard_map
 
-    def body(p, s, pbs, seed_ids, n_real, x, y):
+    def body(p, s, pbs, seed_ids, n_real, x, y, step_idx, stats):
         pbs, seed_ids, n_real = jax.tree_util.tree_map(
             lambda a: a[0], (pbs, seed_ids, n_real))
-        return update(p, s, pbs, seed_ids, n_real, x, y)
+        return update(p, s, pbs, seed_ids, n_real, x, y, step_idx, stats)
 
     return jax.jit(shard_map(
         body, mesh=mesh,
-        in_specs=(P(), P(), P("data"), P("data"), P("data"), P(), P()),
-        out_specs=(P(), P(), P(), P())))
+        in_specs=(P(), P(), P("data"), P("data"), P("data"), P(), P(),
+                  P(), P()),
+        out_specs=(P(), P(), P(), P(), P())))
 
 
 def make_device_minibatch_step(apply_blocks, opt, dev_sampler, *,
                                batch_size: int, mesh=None,
                                num_shards: int = 1,
-                               grad_sync: str = "fp32"):
+                               grad_sync: str = "fp32",
+                               skip_nonfinite: bool = True, nan_inject=None):
     """Build the fully-fused device-sampled update:
-    ``step(params, opt_state, seeds, n_real, rnd, x, y) ->
-    (params, opt_state, loss, grads)``.
+    ``step(params, opt_state, seeds, n_real, rnd, x, y, step_idx, stats)
+    -> (params, opt_state, loss, grads, stats)``.
 
     The blocks never exist outside the trace: ``dev_sampler.sample_blocks``
     runs *inside* the jitted program (sampling is integer-only, so taking
@@ -222,16 +320,23 @@ def make_device_minibatch_step(apply_blocks, opt, dev_sampler, *,
     ``axis_index('data')``, so the lockstep round formula
     ``(epoch * 100003 + batch) * num_shards + shard`` from the host path
     carries over unchanged — shards draw from disjoint counter streams and
-    the gradient psum contract (PR 5) is untouched."""
+    the gradient psum contract (PR 5) is untouched.
+
+    The capacity-overflow count from
+    :meth:`~repro.sampling.device_graph.DeviceSampler.sample_blocks_stats`
+    rides the ``stats`` carry (psum'd over 'data' when sharded, so the
+    replicated stats stay identical on every shard)."""
     if grad_sync not in GRAD_SYNC_WIRES:
         raise ValueError(f"grad_sync must be one of {GRAD_SYNC_WIRES}, "
                          f"got {grad_sync!r}")
     num_nodes = dev_sampler.graph.num_nodes
 
-    def update(p, s, seeds, n_real, rnd, x, y):
+    def update(p, s, seeds, n_real, rnd, x, y, step_idx, stats):
         mask = jnp.arange(batch_size) < n_real
         seeds_m = jnp.where(mask, seeds, jnp.int32(num_nodes))
-        pbs = dev_sampler.sample_blocks(seeds_m, rnd)
+        pbs, ovf = dev_sampler.sample_blocks_stats(seeds_m, rnd)
+        if num_shards > 1:
+            ovf = jax.lax.psum(ovf, "data")
 
         def loss_fn(p):
             h = gather_rows(x, pbs[0].src_ids)
@@ -239,12 +344,10 @@ def make_device_minibatch_step(apply_blocks, opt, dev_sampler, *,
             return _xent(logits, jnp.take(y, seeds), mask)
 
         loss, grads = jax.value_and_grad(loss_fn)(p)
-        if num_shards > 1:
-            from repro.dist.collectives import sync_grads
-            grads = sync_grads(grads, "data", wire=grad_sync)
-            loss = jax.lax.pmean(loss, "data")
-        updates, s = opt.update(grads, s, p)
-        return apply_updates(p, updates), s, loss, grads
+        return _step_tail(opt, p, s, loss, grads, stats, ovf,
+                          num_shards=num_shards, grad_sync=grad_sync,
+                          skip_nonfinite=skip_nonfinite,
+                          nan_inject=nan_inject, step_idx=step_idx)
 
     if num_shards <= 1:
         return jax.jit(update)
@@ -253,15 +356,15 @@ def make_device_minibatch_step(apply_blocks, opt, dev_sampler, *,
     from jax.sharding import PartitionSpec as P
     from repro.dist import shard_map
 
-    def body(p, s, seeds, n_real, rnd, x, y):
+    def body(p, s, seeds, n_real, rnd, x, y, step_idx, stats):
         seeds, n_real = seeds[0], n_real[0]
         rnd = rnd + jax.lax.axis_index("data")
-        return update(p, s, seeds, n_real, rnd, x, y)
+        return update(p, s, seeds, n_real, rnd, x, y, step_idx, stats)
 
     return jax.jit(shard_map(
         body, mesh=mesh,
-        in_specs=(P(), P(), P("data"), P("data"), P(), P(), P()),
-        out_specs=(P(), P(), P(), P())))
+        in_specs=(P(), P(), P("data"), P("data"), P(), P(), P(), P(), P()),
+        out_specs=(P(), P(), P(), P(), P())))
 
 
 def layerwise_inference(params, sampler: NeighborSampler, x: Array, *,
@@ -338,7 +441,14 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
                         mesh=None, grad_sync: str = "fp32",
                         double_buffer: bool = True, bucket_base: int = 128,
                         infer_batch: int = 1024,
-                        sampler: str = "host") -> MinibatchTrainResult:
+                        sampler: str = "host",
+                        skip_nonfinite: bool = True,
+                        ckpt_dir: Optional[str] = None,
+                        ckpt_every: int = 50, ckpt_keep: int = 3,
+                        resume: bool = True,
+                        faults=None, prefetch_restarts: int = 2,
+                        device_caps=None, max_escalations: int = 2,
+                        watchdog=None) -> MinibatchTrainResult:
     """Neighbor-sampled minibatch training on ``dataset`` (a
     ``data.graphs.GraphDataset``), one layer per fanout entry.
 
@@ -368,7 +478,34 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
     to overlap), and the per-bucket plans are still chosen by the same
     ``BlockPlanCache``/TuningDB sweep, run once on a representative
     host-sampled batch. Requires finite fanouts and sum/mean aggregation;
-    evaluation (layer-wise inference) stays on the host path."""
+    evaluation (layer-wise inference) stays on the host path.
+
+    Fault tolerance (see module docstring for the contract):
+
+    * ``ckpt_dir`` enables checkpoint/resume: every ``ckpt_every`` steps
+      (and at the end) the replicated ``(params, opt_state)`` plus the
+      run's resume metadata — loss history, device capacities, fault
+      counters — are saved atomically/asynchronously; ``resume=True``
+      restores the latest committed step and fast-forwards the
+      deterministic loader to its ``(epoch, batch)`` position, replaying
+      the interrupted run bit-for-bit. ``ckpt_keep`` bounds retained steps.
+    * ``skip_nonfinite`` (default on) compiles the lockstep-safe
+      non-finite guard into the step: a NaN/Inf loss or gradient on *any*
+      shard skips that update on *every* shard (decision psum'd via
+      ``all_agree``) and counts it in ``result.skipped_steps``.
+    * host-path prefetch-worker deaths restart the pipeline from the
+      delivered batch count, at most ``prefetch_restarts`` times per
+      epoch stream (``result.prefetch_restarts`` counts them).
+    * device-path capacity overflow (edges dropped because the probed
+      ``src_caps`` were undersized) is counted on device; a nonzero
+      epoch delta escalates — capacities double (clamped to the exact
+      worst case) and the sampler+step rebuild — at most
+      ``max_escalations`` times. ``device_caps`` pins the initial
+      capacities (innermost-first), overriding the probe.
+    * ``faults`` (a ``repro.testing.FaultPlan``) injects failures at the
+      production injection points; ``watchdog`` (a
+      ``train.fault_tolerance.StragglerWatchdog``) observes per-step
+      wall-clock (forces a per-step device sync — benchmarking off)."""
     from repro.dist.mesh import (axis_shard_count, leading_axis_sharding,
                                  replicated_sharding)
 
@@ -417,7 +554,48 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
             y = jax.device_put(jnp.asarray(dataset.y))
             stacked = None
 
+        # -- checkpoint/resume state ----------------------------------
+        # global step = epoch * steps_per_epoch + batch_index; a committed
+        # checkpoint at step N means "N lockstep steps completed". All
+        # randomness is stateless (permutation keyed (seed, epoch), draws
+        # keyed by round counters), so resuming = restoring the train
+        # state and skipping the first divmod(N, steps_per_epoch)[1]
+        # batch indices of epoch N // steps_per_epoch — the replayed tail
+        # is bitwise the schedule the killed run would have executed.
+        steps_per_epoch = num_seed_batches(len(train_ids), batch_size,
+                                           num_shards=num_shards)
+        ckpt = None
+        resumed_step = -1
+        start_step = 0
+        prior_losses: list = []
+        restored_caps = None
+        skipped_base = 0          # counters carried over from the killed run
+        overflow_base = 0
+        escalations = 0
+        ckpt_saves = 0
+        n_prefetch_restarts = 0
+        if ckpt_dir is not None:
+            from repro.ckpt import (Checkpointer, checkpoint_extra,
+                                    latest_step)
+            ckpt = Checkpointer(ckpt_dir, keep=ckpt_keep)
+            if resume and latest_step(ckpt_dir) is not None:
+                like = {"params": params, "opt_state": opt_state}
+                shardings = (jax.tree_util.tree_map(lambda _: rep, like)
+                             if num_shards > 1 else None)
+                restored, start_step = ckpt.restore(like,
+                                                    shardings=shardings)
+                params, opt_state = restored["params"], restored["opt_state"]
+                resumed_step = start_step
+                extra = checkpoint_extra(ckpt_dir, start_step)
+                prior_losses = list(extra.get("losses", []))
+                restored_caps = extra.get("src_caps")
+                skipped_base = int(extra.get("skipped", 0))
+                overflow_base = int(extra.get("overflow", 0))
+                escalations = int(extra.get("escalations", 0))
+
         dev = None
+        src_caps = None
+        nan_inject = faults.nan_grad_at if faults is not None else None
         if sampler == "device":
             from repro.sampling import DeviceSampler, device_graph_from_csr
             dgraph = device_graph_from_csr(csr, mesh=mesh)
@@ -432,31 +610,86 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
                 train_ids[: min(batch_size, len(train_ids))], round=r)
                 for r in range(3)]
             n_hops = len(fanouts)
-            src_caps = [int(1.5 * max(p[n_hops - 1 - j].n_src
-                                      for p in probe))
-                        for j in range(n_hops)]
-            dev = DeviceSampler(dgraph, fanouts, batch_size=batch_size,
-                                seed=seed, base=bucket_base,
-                                src_caps=src_caps)
-            # plans come from the same per-bucket sweep the host path runs
-            # (BlockPlanCache -> TuningDB), keyed on the device capacities,
-            # fed one representative host-sampled batch; sell_ok=False
-            # because device packing cannot build the degree-sorted SELL
-            # layout — the sweep measures the best of ELL vs trusted
-            dev.set_plans([
-                plan_cache.plan_for(blk, n_dst=bk.n_dst, n_src=bk.n_src,
-                                    nnz=bk.nnz, k_hint=k, sell_ok=False)
-                for blk, bk, k in zip(probe[0], dev.buckets, dims)])
-            step = make_device_minibatch_step(
-                apply_blocks, opt, dev, batch_size=batch_size, mesh=mesh,
-                num_shards=num_shards, grad_sync=grad_sync)
+            # capacity precedence: checkpointed caps (sampling depends on
+            # them — a resumed run must truncate exactly like the killed
+            # one to replay bitwise) > caller-pinned > probed
+            if restored_caps is not None:
+                src_caps = [int(c) for c in restored_caps]
+            elif device_caps is not None:
+                src_caps = [int(c) for c in device_caps]
+            else:
+                src_caps = [int(1.5 * max(p[n_hops - 1 - j].n_src
+                                          for p in probe))
+                            for j in range(n_hops)]
+
+            def build_device(caps):
+                """(re)build sampler + fused step for ``caps`` — the
+                overflow-escalation path calls this again with doubled
+                capacities (a fresh trace; the old step's compile count
+                is folded into ``extra_traces``)."""
+                d = DeviceSampler(dgraph, fanouts, batch_size=batch_size,
+                                  seed=seed, base=bucket_base,
+                                  src_caps=caps)
+                # plans come from the same per-bucket sweep the host path
+                # runs (BlockPlanCache -> TuningDB), keyed on the device
+                # capacities, fed one representative host-sampled batch;
+                # sell_ok=False because device packing cannot build the
+                # degree-sorted SELL layout — the sweep measures the best
+                # of ELL vs trusted
+                d.set_plans([
+                    plan_cache.plan_for(blk, n_dst=bk.n_dst, n_src=bk.n_src,
+                                        nnz=bk.nnz, k_hint=k, sell_ok=False)
+                    for blk, bk, k in zip(probe[0], d.buckets, dims)])
+                st = make_device_minibatch_step(
+                    apply_blocks, opt, d, batch_size=batch_size, mesh=mesh,
+                    num_shards=num_shards, grad_sync=grad_sync,
+                    skip_nonfinite=skip_nonfinite, nan_inject=nan_inject)
+                return d, st
+
+            dev, step = build_device(src_caps)
         else:
             step = make_minibatch_step(apply_blocks, opt,
                                        batch_size=batch_size, mesh=mesh,
                                        num_shards=num_shards,
-                                       grad_sync=grad_sync)
+                                       grad_sync=grad_sync,
+                                       skip_nonfinite=skip_nonfinite,
+                                       nan_inject=nan_inject)
 
         signatures: set[tuple] = set()
+        extra_traces = 0            # compiles folded in from rebuilt steps
+        losses: list = [float(v) for v in prior_losses]
+        stats = init_step_stats()
+        if num_shards > 1:
+            # commit the carry to the replicated placement like params —
+            # an uncommitted scalar on the first call would retrace once
+            stats = jax.device_put(stats, rep)
+
+        def save_state(nsteps: int, last, *, blocking: bool = False):
+            """Checkpoint ``(params, opt_state)`` + resume metadata at the
+            ``nsteps``-completed-steps point. Reading the stats carry here
+            forces a device sync — paid only at ckpt cadence."""
+            nonlocal ckpt_saves
+            ep_losses = list(losses)
+            if steps_per_epoch and nsteps % steps_per_epoch == 0 and \
+                    last is not None and \
+                    len(ep_losses) < nsteps // steps_per_epoch:
+                # the save landed exactly on an epoch boundary, before the
+                # epoch loop appends this epoch's loss — include it so the
+                # restored history matches the resumed epoch count
+                ep_losses.append(float(last))
+            extra = {"losses": ep_losses,
+                     "src_caps": src_caps,
+                     "skipped": skipped_base + int(stats["skipped"]),
+                     "overflow": overflow_base + int(stats["overflow"]),
+                     "escalations": escalations}
+            ckpt.save(nsteps, {"params": params, "opt_state": opt_state},
+                      blocking=blocking, extra=extra)
+            ckpt_saves += 1
+
+        def maybe_ckpt(gstep: int, last) -> None:
+            if ckpt is not None and ckpt_every > 0 and \
+                    (gstep + 1) % ckpt_every == 0:
+                save_state(gstep + 1, last)
 
         def seed_groups(epoch: int):
             """Lockstep per-shard seed batches, zipped (equal lengths by
@@ -480,14 +713,21 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
                     sell_steps=bk.sell_steps))
             return pbs
 
-        def batch_stream(epoch: int):
+        def batch_stream(epoch: int, start: int = 0):
             """Host half of the pipeline: sample + bucket + pack one
             lockstep batch group per step; runs in the prefetch thread.
-            Yields (pbs, seed_ids, n_real, signature)."""
+            Yields (pbs, seed_ids, n_real, signature). ``start`` skips the
+            first batch indices without sampling them — the resume
+            fast-forward (and the resilient-prefetch rebuild): every
+            stream here is stateless per (seed, epoch, batch index), so
+            skipping consumes no randomness and the tail replays
+            bit-for-bit."""
             # Shard 0 owns the longest slice, so whenever any shard has
             # real seeds, shard 0 does too — it is packed first and
             # therefore the one that tunes a fresh bucket's plan.
             for bi, group in seed_groups(epoch):
+                if bi < start:
+                    continue
                 shard_blocks = [
                     host_sampler.sample(seed_ids[:n_real],
                                    round=(epoch * 100003 + bi) * num_shards
@@ -526,26 +766,66 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
                         jnp.asarray([g[1] for g in group]), stacked)
                     yield pbs, sids, nrs, sig
 
-        def run_epoch(epoch: int):
-            nonlocal params, opt_state
+        # the watchdog starts observing after the first executed epoch:
+        # warmup steps' wall-clock is dominated by compiles, which would
+        # inflate the EMA baseline stragglers are judged against
+        watch_on = False
+
+        def before_step(gstep: int) -> float:
+            t0 = time.perf_counter() if watchdog is not None else 0.0
+            if faults is not None:      # after t0: an injected straggler
+                faults.before_step(gstep)   # delay lands in the window
+            return t0
+
+        def after_step(gstep: int, t0: float, last) -> None:
+            if watchdog is not None and watch_on:
+                jax.block_until_ready(last)
+                watchdog.observe(gstep, time.perf_counter() - t0)
+            maybe_ckpt(gstep, last)
+
+        def run_epoch(epoch: int, start: int = 0):
+            nonlocal params, opt_state, stats, n_prefetch_restarts
             last = None
-            stream = batch_stream(epoch)
+
+            def on_restart(n, delivered, exc):
+                nonlocal n_prefetch_restarts
+                n_prefetch_restarts += 1
+                warnings.warn(
+                    f"prefetch worker died ({exc!r}); restarted from "
+                    f"batch {start + delivered} (restart {n})")
+
+            def mk(delivered: int):
+                s = batch_stream(epoch, start=start + delivered)
+                return faults.wrap_stream(s) if faults is not None else s
+
             if double_buffer:
-                stream = prefetch(stream)
+                stream = resilient_prefetch(
+                    mk, max_restarts=prefetch_restarts,
+                    on_restart=on_restart)
+            else:
+                stream = mk(0)
+            bi = start
             for pbs, sids, nrs, sig in stream:
+                gstep = epoch * steps_per_epoch + bi
+                t0 = before_step(gstep)
                 signatures.add(sig)
-                params, opt_state, last, _ = step(params, opt_state, pbs,
-                                                  sids, nrs, x, y)
+                params, opt_state, last, _, stats = step(
+                    params, opt_state, pbs, sids, nrs, x, y,
+                    jnp.int32(gstep), stats)
+                after_step(gstep, t0, last)
+                bi += 1
             return last
 
-        def run_epoch_device(epoch: int):
+        def run_epoch_device(epoch: int, start: int = 0):
             """The sampler='device' epoch: the host only feeds seed ids
             and the round counter — sampling, packing and the update are
             one jitted call (no prefetch thread: there is no host stage
             left to overlap with)."""
-            nonlocal params, opt_state
+            nonlocal params, opt_state, stats
             last = None
             for bi, group in seed_groups(epoch):
+                if bi < start:
+                    continue
                 rnd = jnp.int32((epoch * 100003 + bi) * num_shards)
                 if num_shards == 1:
                     (seed_ids, n_real), = group
@@ -557,28 +837,70 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
                         stacked)
                     nrs = jax.device_put(
                         jnp.asarray([g[1] for g in group]), stacked)
+                gstep = epoch * steps_per_epoch + bi
+                t0 = before_step(gstep)
                 signatures.add(dev.signature)
-                params, opt_state, last, _ = step(params, opt_state, sids,
-                                                  nrs, rnd, x, y)
+                params, opt_state, last, _, stats = step(
+                    params, opt_state, sids, nrs, rnd, x, y,
+                    jnp.int32(gstep), stats)
+                after_step(gstep, t0, last)
             return last
 
         epoch_fn = run_epoch_device if sampler == "device" else run_epoch
 
-        t0 = time.perf_counter()
-        loss = epoch_fn(0)                       # warmup: compiles buckets
-        jax.block_until_ready(loss)
-        compile_time = time.perf_counter() - t0
+        start_epoch, start_batch = (divmod(start_step, steps_per_epoch)
+                                    if steps_per_epoch else (0, 0))
+        executed = 0
+        compile_time = 0.0
+        post_time = 0.0
+        ovf_seen = 0
+        loss = None
+        try:
+            for ep in range(start_epoch, epochs):
+                t0 = time.perf_counter()
+                loss = epoch_fn(ep, start_batch if ep == start_epoch else 0)
+                jax.block_until_ready(loss)
+                dt = time.perf_counter() - t0
+                if executed == 0:   # first executed epoch compiles buckets
+                    compile_time = dt
+                else:
+                    post_time += dt
+                executed += 1
+                watch_on = True
+                losses.append(float(loss))
+                if dev is not None:
+                    # capacity-overflow escalation, at the epoch boundary
+                    # (never mid-epoch: the rebuild changes the trace and
+                    # the sampled stream, so it must land on a schedule
+                    # point checkpoints can name)
+                    ovf_now = int(stats["overflow"])
+                    if ovf_now > ovf_seen and escalations < max_escalations:
+                        escalations += 1
+                        extra_traces += step._cache_size()
+                        src_caps = [2 * c for c in src_caps]
+                        warnings.warn(
+                            f"device sampler dropped {ovf_now - ovf_seen} "
+                            f"edges to capacity overflow in epoch {ep}; "
+                            f"escalating capacities to {src_caps} "
+                            f"({escalations}/{max_escalations})")
+                        dev, step = build_device(src_caps)
+                    ovf_seen = ovf_now
+        except BaseException:
+            # drain any in-flight async save so the directory a restart
+            # reads is quiescent, then let the failure propagate
+            if ckpt is not None:
+                try:
+                    ckpt.wait()
+                except Exception:
+                    pass
+            raise
+        epoch_time = (post_time / (executed - 1) if executed > 1
+                      else compile_time)
 
-        losses = [float(loss)]
-        t0 = time.perf_counter()
-        for ep in range(1, epochs):
-            loss = epoch_fn(ep)
-            losses.append(float(loss))
-        jax.block_until_ready(loss)
-        if epochs > 1:
-            epoch_time = (time.perf_counter() - t0) / (epochs - 1)
-        else:           # no post-warmup epoch to time: report the warmup
-            epoch_time = compile_time
+        if ckpt is not None:
+            if epochs * steps_per_epoch > start_step:
+                save_state(epochs * steps_per_epoch, loss, blocking=True)
+            ckpt.wait()
 
         def measure_sample_stage() -> float:
             """Wall-clock of the sample(+pack) stage alone for one shard-0
@@ -636,8 +958,15 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
         fanouts=tuple(fanouts), batch_size=batch_size, losses=losses,
         train_acc=train_acc, test_acc=test_acc, epoch_time_s=epoch_time,
         compile_time_s=compile_time, infer_time_s=infer_time,
-        n_traces=step._cache_size(), n_buckets=len(signatures),
+        n_traces=extra_traces + step._cache_size(),
+        n_buckets=len(signatures),
         plan_kinds=plan_cache.kinds(), epochs=epochs,
         num_shards=num_shards, grad_sync=grad_sync,
         sync_bytes_per_step=sync_bytes, sampler=sampler,
-        sample_time_s=sample_time)
+        sample_time_s=sample_time,
+        skipped_steps=skipped_base + int(stats["skipped"]),
+        overflow_edges=overflow_base + int(stats["overflow"]),
+        capacity_escalations=escalations,
+        prefetch_restarts=n_prefetch_restarts,
+        resumed_step=resumed_step, ckpt_saves=ckpt_saves,
+        final_params=jax.device_get(params))

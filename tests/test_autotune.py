@@ -103,6 +103,85 @@ def test_tuning_db_roundtrip(tmp_path, rng):
     assert db2.get(a, 256) is None
 
 
+def test_tuning_db_schema_envelope(tmp_path, rng):
+    """save() writes the versioned envelope and a fresh load resolves the
+    plans stored under it."""
+    import json
+    a = _graph(rng)
+    path = str(tmp_path / "db.json")
+    db = TuningDB(path=path)
+    db.put(a, 128, KernelPlan(kind="ell", k_hint=128))
+    db.save()
+    with open(path) as f:
+        raw = json.load(f)
+    assert raw["schema"] == TuningDB._SCHEMA_VERSION
+    assert set(raw) == {"schema", "plans"}
+    db2 = TuningDB(path=path)
+    assert db2.get(a, 128).kind == "ell"
+
+
+def test_tuning_db_legacy_flat_dict_loads(tmp_path, rng):
+    """Pre-envelope DBs (a bare key->plan dict) still load."""
+    import json
+    a = _graph(rng)
+    path = str(tmp_path / "db.json")
+    flat = {TuningDB.key(a, 128): KernelPlan(kind="ell", k_hint=128).to_json()}
+    with open(path, "w") as f:
+        json.dump(flat, f)
+    db = TuningDB(path=path)
+    assert db.get(a, 128).kind == "ell"
+
+
+def test_tuning_db_corrupt_file_quarantined(tmp_path, rng):
+    """A corrupt DB must not kill training (the tuner would re-tune from
+    scratch anyway): it is renamed to <path>.corrupt for post-mortem, a
+    warning fires, and the tuner starts empty."""
+    import os
+    from repro.testing import corrupt_file
+    a = _graph(rng)
+    path = str(tmp_path / "db.json")
+    db = TuningDB(path=path)
+    db.put(a, 128, autotune(a, 128))
+    db.save()
+    corrupt_file(path)
+    with pytest.warns(UserWarning, match="quarantined"):
+        db2 = TuningDB(path=path)
+    assert len(db2) == 0
+    assert not os.path.exists(path)
+    assert os.path.exists(path + ".corrupt")
+    # the quarantined DB does not block a fresh save at the same path
+    db2.put(a, 128, KernelPlan(kind="ell", k_hint=128))
+    db2.save()
+    assert TuningDB(path=path).get(a, 128).kind == "ell"
+
+
+def test_tuning_db_future_schema_quarantined(tmp_path):
+    """A DB written by a *newer* schema is unreadable by contract —
+    quarantine, don't guess."""
+    import json, os
+    path = str(tmp_path / "db.json")
+    with open(path, "w") as f:
+        json.dump({"schema": 99, "plans": {}}, f)
+    with pytest.warns(UserWarning, match="quarantined"):
+        db = TuningDB(path=path)
+    assert len(db) == 0
+    assert os.path.exists(path + ".corrupt")
+
+
+def test_tuning_db_empty_file_is_empty_db(tmp_path):
+    """Zero-length files (e.g. /dev/null as a scratch path) are an empty
+    DB, not corruption — no quarantine, no warning."""
+    import os, warnings as w
+    path = str(tmp_path / "db.json")
+    open(path, "wb").close()
+    with w.catch_warnings():
+        w.simplefilter("error")
+        db = TuningDB(path=path)
+    assert len(db) == 0
+    assert os.path.exists(path)               # left untouched
+    assert not os.path.exists(path + ".corrupt")
+
+
 def test_tuning_db_key_structural(rng):
     """Equivalent graphs (same sparsity pattern, different values) share a
     key; a different pattern of the same size must not collide."""

@@ -99,6 +99,91 @@ def test_resilient_loop_recovers(tmp_path):
     assert float(state) > 0
 
 
+def test_restore_falls_back_past_truncated_step(tmp_path):
+    """A committed-but-unreadable newest step (crash-truncated array file)
+    is skipped with a warning and the restore lands on the previous
+    complete step; asking for the broken step explicitly still raises."""
+    from repro.testing import corrupt_file
+    save_checkpoint(str(tmp_path), 1, _tree(1.0))
+    save_checkpoint(str(tmp_path), 2, _tree(2.0))
+    bad = os.path.join(str(tmp_path), "step_000000002", "arr_00000.npy")
+    corrupt_file(bad, truncate_to=4)
+    with pytest.warns(UserWarning, match="unreadable"):
+        got, step = restore_checkpoint(str(tmp_path), _tree())
+    assert step == 1
+    np.testing.assert_allclose(np.asarray(got["w"]), 1.0)
+    with pytest.raises(Exception):
+        restore_checkpoint(str(tmp_path), _tree(), step=2)
+
+
+def test_restore_raises_when_all_steps_unreadable(tmp_path):
+    from repro.testing import corrupt_file
+    save_checkpoint(str(tmp_path), 1, _tree(1.0))
+    corrupt_file(os.path.join(str(tmp_path), "step_000000001",
+                              "manifest.json"))
+    with pytest.warns(UserWarning, match="unreadable"):
+        with pytest.raises(FileNotFoundError, match="no readable"):
+            restore_checkpoint(str(tmp_path), _tree())
+
+
+def test_checkpoint_extra_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    ck.save(3, _tree(1.0), extra={"losses": [0.5, 0.4], "caps": [256, 64]})
+    ck.save(6, _tree(2.0), blocking=True, extra={"losses": [0.5, 0.4, 0.3]})
+    assert ck.extra(3) == {"losses": [0.5, 0.4], "caps": [256, 64]}
+    assert ck.extra() == {"losses": [0.5, 0.4, 0.3]}   # latest by default
+    from repro.ckpt import checkpoint_extra
+    assert checkpoint_extra(str(tmp_path), 6) == ck.extra(6)
+    with pytest.raises(FileNotFoundError):
+        checkpoint_extra(str(tmp_path / "nothing-here"))
+
+
+def test_watchdog_event_window_bounded():
+    """The event log is a bounded deque; lifetime aggregates survive
+    eviction as plain counters."""
+    wd = StragglerWatchdog(alpha=0.5, threshold=2.0, max_events=4)
+    for i in range(10):
+        wd.observe(i, 1.0)
+    wd.observe(10, 50.0)                      # flagged, then evicted below
+    for i in range(11, 16):
+        wd.observe(i, 1.0)
+    assert len(wd.events) == 4
+    assert [e.step for e in wd.events] == [12, 13, 14, 15]
+    assert wd.total_steps == 16
+    assert wd.straggler_count == 1            # remembered past eviction
+    assert not any(e.straggler for e in wd.events)
+
+
+def test_resilient_loop_resumes_from_restored_step(tmp_path):
+    """Regression: after an emergency restore the loop must resume from
+    the (state, step) pair the restore returned — each step lands in
+    on_metrics exactly once and the final state is exact."""
+    calls = {"n": 0}
+
+    def step(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 4:           # fails while attempting step 3
+            raise RuntimeError("simulated device loss")
+        return state + batch, {"loss": state}
+
+    ck = Checkpointer(str(tmp_path), keep=3)
+    loop = ResilientLoop(step, ck, ckpt_every=2, max_restarts=2)
+    seen = []
+
+    def batches():
+        while True:
+            yield jnp.asarray(1.0)
+
+    state, end = loop.run(jnp.asarray(0.0), batches(), num_steps=6,
+                          on_metrics=lambda s, m: seen.append(s))
+    # the emergency save wrote (state=3.0, step=3); the retry re-runs
+    # step 3 from there — no step skipped, none double-counted
+    assert seen == [0, 1, 2, 3, 4, 5], seen
+    assert float(state) == 6.0
+    assert end == 6
+    assert loop.restarts == 1 and loop.emergency_saves == 1
+
+
 def test_resilient_loop_gives_up(tmp_path):
     def step(state, batch):
         raise RuntimeError("permanent failure")

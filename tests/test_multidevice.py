@@ -323,7 +323,8 @@ def test_minibatch_data_parallel_grad_sync_bitwise():
     from repro.optim import adamw
     from repro.sampling import (BlockPlanCache, NeighborSampler, pack_block,
                                 plan_buckets, stack_blocks)
-    from repro.train.gnn_minibatch import make_minibatch_step, _make_block_model
+    from repro.train.gnn_minibatch import (make_minibatch_step,
+                                           _make_block_model, init_step_stats)
     ds = make_dataset('reddit', scale=1/512, seed=1)
     csr = sp.csr_from_coo(ds.coo)
     B = 32
@@ -348,14 +349,18 @@ def test_minibatch_data_parallel_grad_sync_bitwise():
     s0 = opt.init(params)
     x, y = jnp.asarray(ds.x), jnp.asarray(ds.y)
     sids, nr = jnp.asarray(seeds), jnp.asarray(B)
+    gi = jnp.int32(0)
     step1 = make_minibatch_step(apply_blocks, opt, batch_size=B)
-    p1, s1, l1, g1 = step1(params, s0, pbs, sids, nr, x, y)
+    p1, s1, l1, g1, st1 = step1(params, s0, pbs, sids, nr, x, y, gi,
+                                init_step_stats())
+    assert int(st1['skipped']) == 0 and int(st1['overflow']) == 0
     mesh = jax.make_mesh((2,), ('data',))
     step2 = make_minibatch_step(apply_blocks, opt, batch_size=B, mesh=mesh,
                                 num_shards=2)
     spbs = tuple(stack_blocks([pb, pb]) for pb in pbs)
-    p2, s2, l2, g2 = step2(params, s0, spbs, jnp.stack([sids, sids]),
-                           jnp.stack([nr, nr]), x, y)
+    p2, s2, l2, g2, st2 = step2(params, s0, spbs, jnp.stack([sids, sids]),
+                                jnp.stack([nr, nr]), x, y, gi,
+                                init_step_stats())
     leaves = jax.tree_util.tree_leaves
     for a, b in zip(leaves(g1), leaves(g2)):
         assert np.array_equal(np.asarray(a), np.asarray(b))
@@ -364,8 +369,9 @@ def test_minibatch_data_parallel_grad_sync_bitwise():
     assert float(l1) == float(l2)
     step3 = make_minibatch_step(apply_blocks, opt, batch_size=B, mesh=mesh,
                                 num_shards=2, grad_sync='int8')
-    p3, s3, l3, g3 = step3(params, s0, spbs, jnp.stack([sids, sids]),
-                           jnp.stack([nr, nr]), x, y)
+    p3, s3, l3, g3, st3 = step3(params, s0, spbs, jnp.stack([sids, sids]),
+                                jnp.stack([nr, nr]), x, y, gi,
+                                init_step_stats())
     for a, b in zip(leaves(g1), leaves(g3)):
         a, b = np.asarray(a), np.asarray(b)
         bound = np.abs(a).max() / 127.0 + 1e-7

@@ -70,6 +70,7 @@ def sampling_table() -> str:
     main = [r for r in run["rows"] if r.get("kind") is None]
     dp = [r for r in run["rows"] if r.get("kind") == "data_parallel"]
     smp = [r for r in run["rows"] if r.get("kind") == "sampler"]
+    rec = [r for r in run["rows"] if r.get("kind") == "recovery"]
     lines = ["| dataset | arch | sampled (s/epoch) | full-batch (s/epoch) | "
              "test acc (mb / fb) | traces/buckets | plans |",
              "|---|---|---|---|---|---|---|"]
@@ -110,6 +111,18 @@ def sampling_table() -> str:
                 f"{r['sample_only_s']:.3f} | "
                 f"{r['n_traces']}/{r['n_buckets']} | "
                 f"{r['mb_test_acc']:.3f} |")
+    if rec:
+        lines.append("\nCheckpointing overhead (async saves on the ckpt "
+                     "cadence vs no checkpointing):\n")
+        lines.append("| dataset | arch | ckpt every | saves | s/epoch "
+                     "(ckpt) | s/epoch (plain) | overhead |")
+        lines.append("|---|---|---|---|---|---|---|")
+        for r in rec:
+            lines.append(
+                f"| {r['dataset']} (1/{round(1 / r['scale'])}) | "
+                f"{r['arch']} | {r['ckpt_every']} | {r['ckpt_saves']} | "
+                f"{r['ckpt_s']:.3f} | {r['plain_s']:.3f} | "
+                f"{r['overhead_x']:.2f}x |")
     return "\n".join(lines)
 
 
