@@ -76,7 +76,7 @@ def main() -> None:
     from benchmarks import (bench_cached_backprop, bench_dist2d,
                             bench_gnn_training, bench_kernels, bench_lm_step,
                             bench_moe_dispatch, bench_sampling,
-                            bench_tuning_curve)
+                            bench_serving, bench_tuning_curve)
 
     scale = 1 / 256 if args.fast else 1 / 64
     benches = {
@@ -104,6 +104,15 @@ def main() -> None:
             batch_size=128 if args.fast else 512,
             epochs=2 if args.fast else 5,
             fb_epochs=5 if args.fast else 30),
+        # fast = the CI smoke (tiny graph, 2 concurrency levels, short
+        # volleys); full = the latency/QPS curves at 3 levels x cache on/off
+        "serving": lambda: bench_serving.run(
+            scale=1 / 512 if args.fast else 1 / 64,
+            fanouts=(5, 5) if args.fast else (10, 10),
+            hidden=32 if args.fast else 64,
+            concurrency=(1, 4) if args.fast else (1, 4, 8),
+            n_requests=60 if args.fast else 240,
+            cache_rows=(0, 1024) if args.fast else (0, 4096)),
         "moe_dispatch": lambda: bench_moe_dispatch.run(
             t=2048 if args.fast else 8192),
         "lm_step": lambda: bench_lm_step.run(

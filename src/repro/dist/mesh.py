@@ -11,7 +11,7 @@ import jax
 
 __all__ = ["make_production_mesh", "make_local_mesh", "make_grid_mesh",
            "make_data_mesh", "axis_shard_count", "replicated_sharding",
-           "leading_axis_sharding"]
+           "leading_axis_sharding", "replicated_device_put"]
 
 
 def axis_shard_count(mesh, axis: str = "data") -> int:
@@ -65,6 +65,17 @@ def replicated_sharding(mesh):
     instead of baking them into every jit trace as constants."""
     from jax.sharding import NamedSharding, PartitionSpec
     return NamedSharding(mesh, PartitionSpec())
+
+
+def replicated_device_put(x, mesh=None):
+    """``device_put`` with mesh-replicated placement when a mesh is given,
+    plain default-device placement otherwise — the one-liner every
+    device-resident singleton (the sampling graph topology, the serving
+    feature-cache table) uses so single-device code and mesh code share a
+    placement path."""
+    if mesh is None:
+        return jax.device_put(x)
+    return jax.device_put(x, replicated_sharding(mesh))
 
 
 def leading_axis_sharding(mesh, axis: str = "data"):

@@ -22,6 +22,8 @@ __all__ = [
     "bsr_spmm_xla",
     "ell_spmm",
     "gathered_ell_spmm",
+    "slot_gather",
+    "table_insert",
     "sell_spmm",
     "sell_spmm_xla",
     "sell_packed_reduce",
@@ -112,6 +114,41 @@ def gathered_ell_spmm(a: ELL, h_full: jnp.ndarray, src_ids: jnp.ndarray
     gathered = jnp.take(h_full, gid, axis=0, mode="fill",
                         fill_value=0)                      # (N, D, K)
     return (a.val[:, :, None].astype(gathered.dtype) * gathered).sum(axis=1)
+
+
+# --------------------------------------------------------------------------
+# Slot-map gather/insert — the serving feature-cache device primitives
+# --------------------------------------------------------------------------
+
+@jax.jit
+def slot_gather(table: jnp.ndarray, slots: jnp.ndarray,
+                rows: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise select between a device-resident cache table and staged
+    fallback rows: ``out[i] = table[slots[i]]`` when ``slots[i] >= 0``
+    (a cache hit — the slot map resolved the id), else ``rows[i]`` (the
+    pinned-host fallback gather, already staged to device by the caller).
+
+    The hit path never touches host memory and the select is exact
+    (rows are copied bit-for-bit, never recomputed), which is what lets
+    the serving parity suite demand cache-hit == cache-miss bitwise.
+    ``slots`` out-of-range on the miss lanes is clamped before the gather
+    so the table fetch stays in-bounds (the lane's value is discarded by
+    the select)."""
+    safe = jnp.clip(slots, 0, table.shape[0] - 1)
+    hit = jnp.take(table, safe, axis=0)
+    return jnp.where((slots >= 0)[:, None], hit, rows)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def table_insert(table: jnp.ndarray, slots: jnp.ndarray,
+                 rows: jnp.ndarray) -> jnp.ndarray:
+    """Scatter miss rows into their assigned cache slots:
+    ``table[slots] = rows`` with the old buffer donated, so steady-state
+    insertion is an in-place device scatter, not a table-sized copy.
+    Out-of-range slots (< 0, the "no insert" lane) drop silently via
+    scatter's OOB semantics."""
+    return table.at[jnp.where(slots >= 0, slots, table.shape[0])].set(rows,
+                                                                      mode="drop")
 
 
 # --------------------------------------------------------------------------

@@ -86,10 +86,8 @@ def device_graph_from_csr(csr: sp.CSR, *, mesh=None) -> DeviceGraph:
     val = np.concatenate([np.asarray(csr.val)[: csr.nse],
                           [0]]).astype(np.float32)
     max_deg = int(np.diff(indptr).max()) if n else 1
-    place = jax.device_put
-    if mesh is not None:
-        from repro.dist.mesh import replicated_sharding
-        place = partial(jax.device_put, device=replicated_sharding(mesh))
+    from repro.dist.mesh import replicated_device_put
+    place = partial(replicated_device_put, mesh=mesh)
     return DeviceGraph(
         indptr=place(jnp.asarray(indptr, jnp.int32)),
         indices=place(jnp.asarray(indices)),

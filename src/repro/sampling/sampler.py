@@ -150,16 +150,25 @@ class NeighborSampler:
                      val=val, num_nodes=self.num_nodes)
 
     # -- the fused k-hop pass --------------------------------------------
-    def sample(self, seeds, *, round: int = 0) -> list[Block]:
+    def sample(self, seeds, *, round: int = 0, fanouts=None) -> list[Block]:
         """All ``len(fanouts)`` hops for one seed minibatch, outermost
         first: ``blocks[0]`` consumes raw features of its ``src_ids``,
-        ``blocks[-1]`` produces the seeds' outputs."""
+        ``blocks[-1]`` produces the seeds' outputs.
+
+        ``fanouts`` overrides the constructor's per-layer fanouts for this
+        call only (same length; ``None`` entries = full neighborhood) —
+        the serving path uses one sampler for both its sampled request
+        mode and its exact full-neighbor parity mode. The rng stream is
+        keyed ``(seed, round)`` either way, so a fixed ``(seeds, round,
+        fanouts)`` triple replays bit-for-bit."""
+        fanouts = self.fanouts if fanouts is None else tuple(fanouts)
+        assert len(fanouts) == len(self.fanouts), (fanouts, self.fanouts)
         frontier = np.asarray(seeds, np.int64)
         assert np.unique(frontier).size == frontier.size, \
             "seed nodes must be unique (slice loader pads off first)"
         rng = np.random.default_rng((self.seed, int(round)))
         blocks: list[Block] = []
-        for fanout in reversed(self.fanouts):
+        for fanout in reversed(fanouts):
             blk = self._block(frontier, fanout, rng)
             blocks.append(blk)
             frontier = blk.src_ids

@@ -1,0 +1,28 @@
+"""repro.serving — online GNN inference with micro-batching + caching.
+
+The serving counterpart of ``train/gnn_minibatch``: a synchronous
+``predict(seeds)`` API over an asynchronous micro-batching core, with
+per-request ego-network sampling through the fused k-hop sampler, the
+training bucket ladder / plan cache for the jitted step, and a
+device-resident LRU feature (or historical-embedding) cache.
+
+    request -> MicroBatcher -> flush -> sample -> pack -> cache gather
+            -> jitted apply_blocks -> per-ticket logits
+
+Parity-tested against offline layer-wise inference (``tests/
+test_serving.py``): full-neighbor serving is bitwise the offline sweep
+when both route through the same kernel plans.
+"""
+from repro.serving.batcher import Flush, MicroBatcher, Ticket
+from repro.serving.feature_cache import CacheStats, FeatureCache
+from repro.serving.server import SERVE_MODES, GNNServer
+
+__all__ = [
+    "Ticket",
+    "Flush",
+    "MicroBatcher",
+    "FeatureCache",
+    "CacheStats",
+    "GNNServer",
+    "SERVE_MODES",
+]

@@ -1,0 +1,243 @@
+"""Device-resident LRU feature/embedding cache with pinned-host fallback.
+
+The operation-level benchmarking literature (Hosseini et al., 2022) shows
+that small-neighborhood GNN inference is dominated not by SpMM but by the
+feature fetch: every request drags its ego network's raw feature rows
+across the host-device boundary. A hot-vertex cache attacks exactly that —
+power-law graphs concentrate most edges on few vertices, so a small
+device-resident table absorbs most of the gather traffic (the DGL frame
+cache pattern).
+
+:class:`FeatureCache` keeps a fixed-capacity ``(capacity, K)`` device
+table plus a host-side **slot map** (id -> slot, LRU-ordered). A request's
+:meth:`gather`:
+
+1. resolves every id through the slot map — hits gather straight from the
+   device table (``kernels/ops.slot_gather``), no host traffic;
+2. misses fall back to one batched host gather from the pinned fallback
+   matrix (one ``device_put`` per flush, never per request);
+3. miss rows are inserted into LRU-evicted slots
+   (``kernels/ops.table_insert`` — an in-place device scatter) and the
+   assembled ``(len(ids), K)`` block feeds the serve step.
+
+Rows are *copied*, never recomputed, so a hit is bitwise identical to the
+fallback row it was filled from — the parity contract the serving test
+suite pins down (cache-on == cache-off, bit for bit).
+
+**Epoch stamps — the historical-embedding staleness contract.** A cache
+over *derived* rows (layer-l embeddings rather than raw features) must be
+invalidated when the model or graph changes. Every inserted row carries
+the cache's current ``epoch``; :meth:`set_epoch` bumps the epoch (and
+usually swaps in the freshly recomputed fallback matrix), after which
+stale-stamped entries are treated as misses and lazily refilled from the
+new fallback — no eager flush, no torn reads. Raw-feature caches simply
+never bump the epoch.
+
+Consistency under faults: the device scatter happens *before* the host
+slot map commits an insertion, so an exception anywhere in the serve step
+leaves every committed map entry pointing at a fully-written row —
+:meth:`check_consistency` gathers every cached row back and verifies it
+against the fallback, which the fault-injection tests call after killing
+a flush mid-serve.
+
+The table is a device singleton like the sampler's
+:class:`~repro.sampling.device_graph.DeviceGraph`: with a mesh it is
+replicated over every shard (``dist.mesh.replicated_device_put``), so a
+data-parallel serving tier shares one logical cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ops import slot_gather, table_insert
+
+__all__ = ["FeatureCache", "CacheStats"]
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Lifetime counters (ids, not gather calls)."""
+
+    hits: int = 0          # ids served from the device table
+    misses: int = 0        # ids fetched from the pinned-host fallback
+    stale: int = 0         # misses caused by an epoch-stamp mismatch
+    evictions: int = 0     # LRU entries displaced by insertions
+    insertions: int = 0    # rows written into the table
+
+    @property
+    def hit_rate(self) -> float:
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 0.0
+
+
+class FeatureCache:
+    """Fixed-capacity device-resident LRU row cache over a host matrix.
+
+    ``fallback`` is the pinned-host backing store — raw node features, or
+    (historical mode) the layer-(L-1) embedding matrix an offline refresh
+    produced. ``capacity`` rows live on device; ``capacity=0`` degrades
+    to pure fallback gathers (the cache-off baseline the benchmarks
+    compare against) and ``capacity=1`` thrashes but stays correct —
+    both are covered by the degenerate-capacity tests.
+
+    Ids ``>= num_rows`` are the block-padding sentinel: they gather a
+    zero row (matching ``sampling.blocks.gather_rows``'s fill) and are
+    never cached.
+    """
+
+    def __init__(self, fallback: np.ndarray, capacity: int, *,
+                 mesh=None, epoch: int = 0):
+        from repro.dist.mesh import replicated_device_put
+        assert fallback.ndim == 2, fallback.shape
+        self._fallback = np.ascontiguousarray(fallback, dtype=np.float32)
+        self.capacity = int(capacity)
+        assert self.capacity >= 0, capacity
+        self.epoch = int(epoch)
+        self._mesh = mesh
+        # one dummy row at capacity 0 keeps slot_gather's shapes legal;
+        # the slot map is empty so it is never selected
+        self._table = replicated_device_put(
+            jnp.zeros((max(self.capacity, 1), fallback.shape[1]),
+                      jnp.float32), mesh)
+        # id -> (slot, epoch-stamp); ordering IS the recency order
+        # (oldest first), maintained with move_to_end on every hit
+        self._slot_of: OrderedDict[int, tuple[int, int]] = OrderedDict()
+        self._free: list[int] = list(range(self.capacity))
+        self.stats = CacheStats()
+
+    # -- introspection ----------------------------------------------------
+    @property
+    def num_rows(self) -> int:
+        return self._fallback.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self._fallback.shape[1]
+
+    def cached_ids(self) -> list[int]:
+        """Resident ids, least-recently-used first."""
+        return list(self._slot_of)
+
+    # -- the lifecycle ----------------------------------------------------
+    def set_epoch(self, epoch: int, fallback: Optional[np.ndarray] = None
+                  ) -> None:
+        """Advance the staleness epoch; optionally swap the backing store
+        (the historical-embedding refresh: recompute the matrix offline,
+        then publish it here). Entries stamped with an older epoch stay
+        resident but read as misses until lazily refilled."""
+        assert int(epoch) >= self.epoch, (epoch, self.epoch)
+        if fallback is not None:
+            assert fallback.shape == self._fallback.shape, \
+                (fallback.shape, self._fallback.shape)
+            self._fallback = np.ascontiguousarray(fallback,
+                                                  dtype=np.float32)
+        self.epoch = int(epoch)
+
+    def _slots_for(self, ids: np.ndarray) -> np.ndarray:
+        """Slot per id: the hit slot when resident with a fresh stamp,
+        else -1. Refreshes LRU recency for hits; counts stale stamps."""
+        slots = np.full(len(ids), -1, np.int32)
+        for i, nid in enumerate(ids):
+            nid = int(nid)
+            entry = self._slot_of.get(nid)
+            if entry is None:
+                continue
+            slot, stamp = entry
+            if stamp != self.epoch:
+                self.stats.stale += 1
+                continue
+            slots[i] = slot
+            self._slot_of.move_to_end(nid)
+        return slots
+
+    def _insert(self, ids: Sequence[int], rows: np.ndarray) -> None:
+        """Write ``rows`` into LRU-assigned slots. Device scatter first,
+        host map commit second — an exception in between leaves the map
+        pointing only at fully-written rows (see module docstring)."""
+        take = min(len(ids), self.capacity)
+        if take == 0:
+            return
+        # inserting more ids than slots: keep the *last* `capacity` ids
+        # (they would have evicted the earlier ones anyway)
+        ids = list(ids)[-take:]
+        rows = rows[-take:]
+        slots = []
+        for nid in ids:
+            stale = self._slot_of.pop(int(nid), None)
+            if stale is not None:          # stale-stamp refill reuses its slot
+                slots.append(stale[0])
+            elif self._free:
+                slots.append(self._free.pop())
+            else:                          # evict the least-recently-used
+                _, (slot, _) = self._slot_of.popitem(last=False)
+                self.stats.evictions += 1
+                slots.append(slot)
+        self._table = table_insert(self._table,
+                                   jnp.asarray(np.asarray(slots, np.int32)),
+                                   jnp.asarray(rows))
+        for nid, slot in zip(ids, slots):
+            self._slot_of[int(nid)] = (slot, self.epoch)
+        self.stats.insertions += len(ids)
+
+    def gather(self, ids) -> jnp.ndarray:
+        """``(len(ids), K)`` device rows for global ``ids`` (host int
+        array; ``>= num_rows`` = padding sentinel -> zero row). Hits come
+        from the device table, misses from one batched pinned-host
+        fallback gather, and the miss rows are inserted for next time."""
+        ids = np.asarray(ids)
+        real = ids < self.num_rows
+        slots = self._slots_for(ids)
+        slots[~real] = -1
+        miss = real & (slots < 0)
+
+        # staged fallback rows: zero everywhere except miss lanes — the
+        # sentinel lanes' zeros double as the pad fill
+        staged = np.zeros((len(ids), self.k), np.float32)
+        staged[miss] = self._fallback[ids[miss]]
+        self.stats.hits += int(np.count_nonzero(slots >= 0))
+        self.stats.misses += int(np.count_nonzero(miss))
+
+        # gather BEFORE inserting: this call's misses may LRU-evict this
+        # call's own hits, and their slots must be read out first (the
+        # insert writes a fresh table value, so the dispatched gather
+        # keeps reading the pre-insert buffer)
+        out = slot_gather(self._table, jnp.asarray(slots),
+                          jnp.asarray(staged))
+        miss_ids = ids[miss]
+        if len(miss_ids) and self.capacity:
+            # ids are unique per block relabel; dedup defensively anyway
+            uniq, first = np.unique(miss_ids, return_index=True)
+            self._insert(uniq.tolist(), staged[miss][first])
+        return out
+
+    def gather_reference(self, ids) -> jnp.ndarray:
+        """The no-cache reference: the same gather served entirely from
+        the fallback matrix (sentinels -> zero rows), touching no cache
+        state. Tests pin ``gather`` to this bitwise."""
+        ids = np.asarray(ids)
+        real = ids < self.num_rows
+        staged = np.zeros((len(ids), self.k), np.float32)
+        staged[real] = self._fallback[ids[real]]
+        return jnp.asarray(staged)
+
+    def check_consistency(self) -> None:
+        """Assert every fresh-stamped cached row equals its fallback row
+        bit-for-bit (the gather-back verification the fault tests run
+        after an injected mid-serve exception)."""
+        fresh = [(nid, slot) for nid, (slot, stamp) in self._slot_of.items()
+                 if stamp == self.epoch]
+        if not fresh:
+            return
+        nids = np.asarray([nid for nid, _ in fresh])
+        slots = np.asarray([slot for _, slot in fresh], np.int32)
+        assert len(set(slots.tolist())) == len(slots), \
+            "slot map corrupt: two ids share a slot"
+        got = np.asarray(self._table)[slots]
+        want = self._fallback[nids]
+        assert np.array_equal(got, want), \
+            f"cache rows diverged from fallback for ids {nids.tolist()}"

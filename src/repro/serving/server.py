@@ -1,0 +1,360 @@
+"""Online GNN inference serving: ego-sampled micro-batched prediction.
+
+:class:`GNNServer` turns minibatch-trained weights (the layer-keyed param
+pytree of ``train/gnn_minibatch`` and the full-batch zoo) into a
+synchronous ``predict(seeds) -> logits`` service:
+
+* callers' requests coalesce in a :class:`~repro.serving.batcher.MicroBatcher`
+  (flush on ``max_batch`` or the ``max_delay_s`` latency SLO, whichever
+  first);
+* each flush samples one ego network around the union of its seed sets
+  with the PR 4 fused k-hop :class:`~repro.sampling.NeighborSampler` —
+  full-neighbor (exact), fixed-fanout (sampled), or a single hop over
+  historical embeddings;
+* the blocks ride the *training* bucket ladder and
+  :class:`~repro.sampling.BlockPlanCache` (TuningDB-persisted plans), so
+  the jitted serve step retraces at most once per bucket signature and
+  reuses the plans training already tuned;
+* features come from a device-resident
+  :class:`~repro.serving.feature_cache.FeatureCache` (LRU table +
+  pinned-host fallback), so hot vertices never cross the host-device
+  boundary twice.
+
+**Parity contract** (``tests/test_serving.py``): the serve step *is* the
+training forward — ``make_block_model``'s ``apply_blocks`` over packed
+blocks on cache-gathered features. In ``mode="full"`` the sampler takes
+every in-edge, so served logits equal the offline layer-wise sweep
+(:func:`~repro.train.gnn_minibatch.layerwise_inference`) — bitwise, when
+both sides route their aggregations through the same plan kind (the
+suite pins ``tune=False`` = trusted segment ops everywhere; tuned runs
+agree to float tolerance). ``mode="sampled"`` is deterministic per
+``(seed, flush round)``; ``mode="historical"`` serves one full-neighbor
+hop over epoch-stamped layer-(L-1) embeddings that
+:meth:`GNNServer.refresh_embeddings` recomputes offline — deep fanouts
+collapse to layer-1 work, and right after a refresh the result is again
+bitwise the offline sweep.
+
+Threading: one daemon serve loop owns all device work (flush execution,
+plan tuning, jit traces); callers only enqueue tickets and block on
+them. ``start=False`` skips the thread — tests drive flushes
+deterministically with :meth:`GNNServer.run_pending`. A
+``testing.FaultPlan(flush_exception_at=k)`` fails flush ``k``'s tickets
+with the injected error while the loop, the batcher, and the cache all
+keep serving.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import sparse as sp
+from repro.core.patch import patched
+from repro.sampling import (BlockPlanCache, NeighborSampler, pack_block,
+                            plan_buckets, round_bucket)
+from repro.serving.batcher import Flush, MicroBatcher, Ticket
+from repro.serving.feature_cache import FeatureCache
+from repro.train.gnn_minibatch import (_block_arch, layerwise_inference,
+                                       make_block_model)
+
+__all__ = ["GNNServer", "SERVE_MODES"]
+
+SERVE_MODES = ("full", "sampled", "historical")
+
+
+def _infer_dims(params) -> list[int]:
+    """Per-layer dims from the layer-keyed param pytree (either zoo)."""
+    dims = []
+    for i in range(len(params)):
+        p = params[f"l{i}"]
+        if "w_self" in p:                        # sage
+            d_in, d_out = p["w_self"].shape
+        else:                                    # gin
+            d_in, d_out = p["w1"].shape[0], p["w2"].shape[1]
+        dims.append(int(d_in))
+        if i == len(params) - 1:
+            dims.append(int(d_out))
+    return dims
+
+
+class GNNServer:
+    """Micro-batched online inference over one graph + trained params.
+
+    ``dataset`` is a ``data.graphs.GraphDataset`` (graph, features,
+    labels); ``params`` the trained layer-keyed pytree. ``mode``:
+
+    * ``"full"`` — exact: every hop takes the full in-neighborhood.
+    * ``"sampled"`` — ``fanouts`` neighbors per hop, rng keyed
+      ``(seed, flush index)`` so any flush replays bit-for-bit.
+    * ``"historical"`` — one full-neighbor hop over cached layer-(L-1)
+      embeddings + the final layer; call :meth:`refresh_embeddings`
+      after weight/feature updates (bumps the cache epoch — stale
+      entries lazily refill).
+
+    ``cache_capacity`` rows of features (or historical embeddings) stay
+    device-resident; ``0`` disables caching (the bench baseline).
+    ``tune=False`` pins every block plan to the trusted segment kernels
+    — the configuration the bitwise parity suite runs.
+    """
+
+    def __init__(self, params, dataset, *, arch: str = "sage-sum",
+                 fanouts=(10, 10), mode: str = "full",
+                 max_batch: int = 64, max_delay_s: float = 0.010,
+                 cache_capacity: int = 4096,
+                 bucket_base: int = 128, seed_bucket_base: int = 16,
+                 tune: bool = True, tuning_db=None, use_isplib: bool = True,
+                 sample_seed: int = 0, mesh=None, faults=None,
+                 start: bool = True):
+        if mode not in SERVE_MODES:
+            raise ValueError(f"mode must be one of {SERVE_MODES}, "
+                             f"got {mode!r}")
+        self.arch = arch
+        self.mode = mode
+        self.fanouts = tuple(fanouts)
+        self.use_isplib = bool(use_isplib)
+        self.bucket_base = int(bucket_base)
+        self.mesh = mesh
+        self.faults = faults
+        self.params = params
+        self.dims = _infer_dims(params)
+        self.n_layers = len(self.dims) - 1
+        assert self.n_layers == len(self.fanouts), \
+            (self.n_layers, self.fanouts)
+        _, semiring = _block_arch(arch)
+
+        csr = sp.csr_from_coo(dataset.coo)
+        self.num_nodes = int(csr.nrows)
+        self.x = np.ascontiguousarray(np.asarray(dataset.x), np.float32)
+        self.sampler = NeighborSampler(csr, self.fanouts, seed=sample_seed)
+        self.plan_cache = BlockPlanCache(semiring=semiring, tune=tune,
+                                         db=tuning_db)
+        _, self._conv, self._apply_blocks, _ = make_block_model(
+            arch, self.dims[0], self.dims[1] if self.n_layers > 1
+            else self.dims[-1], self.dims[-1], self.n_layers)
+        self._jit_apply = jax.jit(
+            lambda p, pbs, h: self._apply_blocks(p, pbs, h))
+
+        # feature cache: raw features, or (historical) the layer-(L-1)
+        # embedding matrix — filled by the first refresh_embeddings()
+        if mode == "historical":
+            hist0 = self._hidden_matrix()
+            self.cache = FeatureCache(hist0, cache_capacity, mesh=mesh)
+        else:
+            self.cache = FeatureCache(self.x, cache_capacity, mesh=mesh)
+
+        self.batcher = MicroBatcher(max_batch, max_delay_s,
+                                    bucket_base=seed_bucket_base)
+        self._cv = threading.Condition()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()        # stats below
+        self.flushes = 0
+        self.flush_errors = 0
+        self.served_requests = 0
+        self.latencies_s: list[float] = []
+        self.flush_sizes: list[int] = []
+        if start:
+            self._thread = threading.Thread(target=self._loop, daemon=True,
+                                            name="gnn-serve-loop")
+            self._thread.start()
+
+    # -- request API ------------------------------------------------------
+    def submit(self, seeds: Sequence[int]) -> Ticket:
+        """Enqueue one request (unique node ids) and return its ticket
+        without blocking. Validation errors raise here, in the caller."""
+        arr = np.asarray(seeds, np.int64).ravel()
+        if arr.size and (arr.min() < 0 or arr.max() >= self.num_nodes):
+            raise ValueError(f"seed ids out of range [0, {self.num_nodes})")
+        if np.unique(arr).size != arr.size:
+            raise ValueError("seed ids within one request must be unique")
+        t = self.batcher.submit(arr)
+        with self._cv:
+            self._cv.notify()
+        return t
+
+    def predict(self, seeds: Sequence[int], timeout: Optional[float] = 30.0
+                ) -> np.ndarray:
+        """Synchronous inference: ``(len(seeds), num_classes)`` logits.
+        Blocks while the request coalesces with concurrent ones; serve-
+        side errors re-raise here."""
+        t = self.submit(seeds)
+        if self._thread is None:
+            # no serve loop: drive the batcher inline (deadline-accurate
+            # for this caller; concurrent tests use run_pending instead)
+            self.run_pending(force=True)
+        return t.result(timeout)
+
+    # -- serve loop -------------------------------------------------------
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            fl = self.batcher.next_flush()
+            if fl is not None:
+                self._execute(fl)
+                continue
+            dl = self.batcher.deadline()
+            now = time.monotonic()
+            wait = 0.05 if dl is None else min(max(dl - now, 1e-4), 0.05)
+            with self._cv:
+                if self._stop.is_set():
+                    break
+                self._cv.wait(timeout=wait)
+        # shutdown: nothing queued may be left un-answered
+        for fl in self.batcher.drain():
+            self._execute(fl)
+
+    def run_pending(self, *, force: bool = False, now: Optional[float] = None
+                    ) -> int:
+        """Drive the batcher from the calling thread (``start=False``
+        mode): execute every composable flush, forcing composition when
+        ``force`` regardless of the size/deadline triggers. Returns the
+        number of flushes executed."""
+        n = 0
+        if force:
+            for fl in self.batcher.drain():
+                self._execute(fl)
+                n += 1
+            return n
+        while True:
+            fl = self.batcher.next_flush(now)
+            if fl is None:
+                return n
+            self._execute(fl)
+            n += 1
+
+    def stop(self, timeout: float = 10.0) -> None:
+        """Stop the serve loop, draining (and answering) anything queued."""
+        self._stop.set()
+        with self._cv:
+            self._cv.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout)
+            self._thread = None
+        for fl in self.batcher.drain():    # start=False / late arrivals
+            self._execute(fl)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.stop()
+
+    # -- flush execution ---------------------------------------------------
+    def _serve_blocks(self, uniq: np.ndarray, flush_index: int):
+        """(blocks, fanouts-for-bucketing, params-view) for one flush."""
+        if self.mode == "historical":
+            # one full-neighbor hop over the historical matrix + final layer
+            blocks = [self.sampler.full_block(uniq)]
+            return blocks, (None,), {"l0": self.params[f"l{self.n_layers-1}"]}
+        if self.mode == "full":
+            fo = (None,) * self.n_layers
+            blocks = self.sampler.sample(uniq, round=flush_index, fanouts=fo)
+            return blocks, fo, self.params
+        blocks = self.sampler.sample(uniq, round=flush_index)
+        return blocks, self.fanouts, self.params
+
+    def _execute(self, flush: Flush) -> None:
+        try:
+            if self.faults is not None:
+                self.faults.before_flush(flush.index)
+            with patched(self.use_isplib):
+                out = self._run_model(flush)
+        except BaseException as exc:            # noqa: BLE001 — to tickets
+            now = time.monotonic()
+            with self._lock:
+                self.flushes += 1
+                self.flush_errors += 1
+            for t in flush.tickets:
+                t.fail(exc, now)
+            return
+        now = time.monotonic()
+        with self._lock:
+            self.flushes += 1
+            self.served_requests += len(flush.tickets)
+            self.flush_sizes.append(flush.n_real)
+            for t, sl in zip(flush.tickets, flush.splits()):
+                t.flush_index = flush.index
+                self.latencies_s.append(now - t.submitted_at)
+        for t, sl in zip(flush.tickets, flush.splits()):
+            t.fill(out[sl], now)
+
+    def _run_model(self, flush: Flush) -> np.ndarray:
+        """Sample, pack, gather, apply — one micro-batch end to end.
+        Returns per-submitted-seed logit rows in ticket order."""
+        uniq, inverse = np.unique(flush.seeds, return_inverse=True)
+        blocks, fo, params = self._serve_blocks(uniq, flush.index)
+        buckets = plan_buckets(blocks, batch_size=flush.bucket,
+                               fanouts=fo, base=self.bucket_base)
+        # per-layer operand widths: the cache's row width feeds the
+        # outermost block; deeper blocks see the hidden dims
+        ks = [self.cache.k] + [self.dims[i] for i in range(1, len(blocks))]
+        pbs = []
+        for blk, bk, k in zip(blocks, buckets, ks):
+            plan = self.plan_cache.plan_for(blk, n_dst=bk.n_dst,
+                                            n_src=bk.n_src, nnz=bk.nnz,
+                                            k_hint=k)
+            pbs.append(pack_block(blk, n_dst=bk.n_dst, n_src=bk.n_src,
+                                  nnz=bk.nnz, plan=plan,
+                                  ell_width=bk.ell_width,
+                                  sell_steps=bk.sell_steps))
+        # the outermost block's padded source ids, host-side, with the
+        # cache's padding sentinel (== num_rows -> zero row, matching
+        # gather_rows' fill)
+        src = np.full(buckets[0].n_src, self.cache.num_rows, np.int64)
+        src[: blocks[0].n_src] = blocks[0].src_ids
+        h = self.cache.gather(src)
+        out = self._jit_apply(params, tuple(pbs), h)
+        return np.asarray(out)[: len(uniq)][inverse]
+
+    # -- historical embeddings --------------------------------------------
+    def _hidden_matrix(self) -> np.ndarray:
+        """Offline layer-wise sweep up to the penultimate layer — the
+        historical matrix (``x`` itself for a 1-layer model)."""
+        with patched(self.use_isplib):
+            h = layerwise_inference(self.params, self.sampler,
+                                    jnp.asarray(self.x), arch=self.arch,
+                                    dims=self.dims,
+                                    plan_cache=self.plan_cache,
+                                    bucket_base=self.bucket_base,
+                                    upto=self.n_layers - 1)
+        return np.asarray(h)
+
+    def refresh_embeddings(self) -> None:
+        """Recompute the historical layer-(L-1) matrix offline and publish
+        it under a bumped cache epoch — stale-stamped entries turn into
+        misses and lazily refill from the new matrix."""
+        assert self.mode == "historical", self.mode
+        self.cache.set_epoch(self.cache.epoch + 1,
+                             fallback=self._hidden_matrix())
+
+    # -- offline reference / telemetry ------------------------------------
+    def offline_logits(self) -> np.ndarray:
+        """The exact offline answer for every node: the layer-wise
+        full-neighbor sweep through the *same* plan cache (same plan
+        kinds => bitwise comparable). The parity suite's reference."""
+        with patched(self.use_isplib):
+            out = layerwise_inference(self.params, self.sampler,
+                                      jnp.asarray(self.x), arch=self.arch,
+                                      dims=self.dims,
+                                      plan_cache=self.plan_cache,
+                                      bucket_base=self.bucket_base)
+        return np.asarray(out)
+
+    def latency_stats(self) -> dict:
+        """p50/p99/mean request latency + flush shape counters so far."""
+        with self._lock:
+            lat = np.asarray(self.latencies_s, np.float64)
+            sizes = list(self.flush_sizes)
+            out = dict(requests=self.served_requests, flushes=self.flushes,
+                       flush_errors=self.flush_errors,
+                       cache_hit_rate=self.cache.stats.hit_rate)
+        if len(lat):
+            out.update(p50_ms=float(np.percentile(lat, 50) * 1e3),
+                       p99_ms=float(np.percentile(lat, 99) * 1e3),
+                       mean_ms=float(lat.mean() * 1e3))
+        if sizes:
+            out["mean_flush_size"] = float(np.mean(sizes))
+        return out

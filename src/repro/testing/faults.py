@@ -15,7 +15,12 @@ fires each configured fault exactly once:
   raises before delivering its ``k``-th item (0-based, counted over the
   whole run, restarts included), exercising ``resilient_prefetch``;
 * ``straggler_at=k`` — sleep ``straggler_delay_s`` before step ``k`` so a
-  :class:`~repro.train.fault_tolerance.StragglerWatchdog` flags it.
+  :class:`~repro.train.fault_tolerance.StragglerWatchdog` flags it;
+* ``flush_exception_at=k`` — raise :class:`InjectedFault` from the serving
+  loop just before micro-batch flush ``k`` executes (the "model blew up
+  mid-serve" fault: every ticket in that flush must fail with the error
+  while the batcher keeps serving later flushes and the feature cache
+  stays consistent — see ``repro.serving``).
 
 Each fault is one-shot: a resumed run that replays past a fired step
 index does not re-fire it (the plan object carries the state, so reuse
@@ -51,6 +56,7 @@ class FaultPlan:
     prefetch_death_at: Optional[int] = None
     straggler_at: Optional[int] = None
     straggler_delay_s: float = 0.25
+    flush_exception_at: Optional[int] = None
 
     def __post_init__(self):
         self._fired: set = set()
@@ -65,6 +71,16 @@ class FaultPlan:
         if self.step_exception_at == gstep and "kill" not in self._fired:
             self._fired.add("kill")
             raise InjectedFault(f"injected step exception at step {gstep}")
+
+    # -- serving-loop injection point --------------------------------------
+    def before_flush(self, flush_idx: int) -> None:
+        """Called by ``serving.server.GNNServer`` before executing micro-
+        batch flush ``flush_idx``."""
+        if self.flush_exception_at == flush_idx and \
+                "flush" not in self._fired:
+            self._fired.add("flush")
+            raise InjectedFault(
+                f"injected flush exception at flush {flush_idx}")
 
     # -- prefetch producer injection --------------------------------------
     def wrap_stream(self, it: Iterator) -> Iterator:

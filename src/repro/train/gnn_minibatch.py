@@ -90,7 +90,8 @@ from repro.train.gnn import _acc, _xent
 Array = Any
 
 __all__ = ["train_gnn_minibatch", "MinibatchTrainResult", "make_minibatch_step",
-           "make_device_minibatch_step", "layerwise_inference", "MB_ARCHS",
+           "make_device_minibatch_step", "make_block_model",
+           "layerwise_inference", "MB_ARCHS",
            "GRAD_SYNC_WIRES", "SAMPLERS", "init_step_stats"]
 
 MB_ARCHS = ("sage-sum", "sage-mean", "sage-max", "gin")
@@ -141,11 +142,20 @@ def _block_arch(arch: str):
     return aggr, aggr
 
 
-def _make_block_model(arch: str, in_dim: int, hidden: int, out_dim: int,
-                      n_layers: int):
-    """init/apply over a block stack. Params are layer-keyed ('l0', 'l1',
-    ...) with the exact per-layer structure of the full-batch zoo, so
-    minibatch-trained weights serve full-batch apply and vice versa."""
+def make_block_model(arch: str, in_dim: int, hidden: int, out_dim: int,
+                     n_layers: int):
+    """init/apply over a block stack — the step factory shared by the
+    minibatch trainer AND the online serving path (``repro.serving``),
+    so a served prediction runs the exact computation a training-step
+    forward (and therefore the parity suite's offline reference) runs.
+    Params are layer-keyed ('l0', 'l1', ...) with the exact per-layer
+    structure of the full-batch zoo, so minibatch-trained weights serve
+    full-batch apply and vice versa.
+
+    Returns ``(init, conv, apply_blocks, dims)``: ``conv(p_l, pb, h)``
+    applies one layer over one packed block, ``apply_blocks(params, pbs,
+    h)`` folds a whole block stack with inter-layer relu (none after the
+    last layer)."""
     aggr, _ = _block_arch(arch)
     dims = [in_dim] + [hidden] * (n_layers - 1) + [out_dim]
     init_one = L.init_gin if arch == "gin" else L.init_sage
@@ -371,7 +381,8 @@ def layerwise_inference(params, sampler: NeighborSampler, x: Array, *,
                         arch: str, dims: list[int],
                         plan_cache: BlockPlanCache,
                         batch_size: int = 1024,
-                        bucket_base: int = 128) -> Array:
+                        bucket_base: int = 128,
+                        upto: Optional[int] = None) -> Array:
     """Exact logits for every node, one layer at a time (the DGL
     inference pattern): layer l is computed for *all* nodes over their
     *full* neighborhoods before layer l+1 starts, so each node's
@@ -380,10 +391,19 @@ def layerwise_inference(params, sampler: NeighborSampler, x: Array, *,
 
     Blocks ride the same bucket ladder and plan cache as training; the
     dense operand is the full current-layer matrix, so the ELL plans take
-    the fused-gather path (``kernels/ops.gathered_ell_spmm``)."""
+    the fused-gather path (``kernels/ops.gathered_ell_spmm``).
+
+    ``upto`` stops after that many layers and returns the hidden matrix
+    instead of logits (relu applied after every computed layer, since all
+    of them are non-final) — the serving path's historical-embedding
+    refresh: the layer-(L-1) matrix this produces is, bit-for-bit, the
+    penultimate state the full pass would have used, which is what makes
+    historical serving exactly parity-checkable against offline logits."""
     aggr, _ = _block_arch(arch)
     n = sampler.num_nodes
     n_layers = len(dims) - 1
+    n_run = n_layers if upto is None else int(upto)
+    assert 0 <= n_run <= n_layers, (upto, n_layers)
 
     @partial(jax.jit, static_argnames=("relu_after",))
     def infer_layer(p_l, pb, h, relu_after):
@@ -416,7 +436,7 @@ def layerwise_inference(params, sampler: NeighborSampler, x: Array, *,
         batches.append((dst, blk, sizes, width, {}))
 
     h = x
-    for li in range(n_layers):
+    for li in range(n_run):
         rows = []
         for dst, blk, sizes, width, packed in batches:
             plan = plan_cache.plan_for(blk, k_hint=h.shape[1], **sizes)
@@ -524,7 +544,7 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
     with patched(use_isplib):
         csr = sp.csr_from_coo(dataset.coo)
         host_sampler = NeighborSampler(csr, fanouts, seed=seed)
-        init, conv, apply_blocks, dims = _make_block_model(
+        init, conv, apply_blocks, dims = make_block_model(
             arch, dataset.num_features, hidden, dataset.num_classes,
             n_layers)
         params = init(jax.random.PRNGKey(seed))

@@ -324,7 +324,7 @@ def test_minibatch_data_parallel_grad_sync_bitwise():
     from repro.sampling import (BlockPlanCache, NeighborSampler, pack_block,
                                 plan_buckets, stack_blocks)
     from repro.train.gnn_minibatch import (make_minibatch_step,
-                                           _make_block_model, init_step_stats)
+                                           make_block_model, init_step_stats)
     ds = make_dataset('reddit', scale=1/512, seed=1)
     csr = sp.csr_from_coo(ds.coo)
     B = 32
@@ -342,7 +342,7 @@ def test_minibatch_data_parallel_grad_sync_bitwise():
                               nnz=bk.nnz, plan=plan, ell_width=bk.ell_width,
                               sell_steps=bk.sell_steps))
     pbs = tuple(pbs)
-    init, conv, apply_blocks, _ = _make_block_model(
+    init, conv, apply_blocks, _ = make_block_model(
         'sage-mean', ds.num_features, 32, ds.num_classes, 2)
     params = init(jax.random.PRNGKey(0))
     opt = adamw(1e-2)

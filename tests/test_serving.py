@@ -1,0 +1,431 @@
+"""Online serving (`repro.serving`): parity vs offline inference,
+micro-batcher queueing invariants, feature-cache semantics, faults.
+
+The load-bearing suite is parity: a served prediction must be the *same
+computation* as the offline layer-wise sweep. With ``tune=False`` every
+block plan routes through the trusted segment kernels on both sides, so
+full-neighbor serving is **bitwise** the offline answer — cache hits,
+cache misses, coalesced or solo, historical or direct. Sampled fanouts
+replay bit-for-bit per ``(seed, flush round)`` and match the exact
+answer to float tolerance once the fanout covers every edge (the edge
+*order* differs, so only the set, not the bit pattern, is preserved).
+
+Batcher properties run through the ``_hypothesis_stub`` (deterministic
+seeded parametrization): arbitrary arrival orders never drop, duplicate
+or reorder a request, never overfill ``max_batch``, never hold a request
+past its latency SLO while the consumer polls, and bucket selection is a
+pure function of the flush composition.
+"""
+import random
+import threading
+import time
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                                    # pragma: no cover
+    from _hypothesis_stub import given, settings, strategies as st
+
+from repro.sampling import round_bucket
+from repro.serving import FeatureCache, GNNServer, MicroBatcher
+from repro.testing import FaultPlan, InjectedFault
+
+ARCH = "sage-sum"
+FANOUTS = (5, 5)
+
+
+@pytest.fixture(scope="module")
+def served(tiny_dataset):
+    """(params, offline logits) — one quick minibatch-trained model and
+    its exact offline answer under untuned (trusted-kernel) plans."""
+    from repro.train.gnn_minibatch import train_gnn_minibatch
+    res = train_gnn_minibatch(ARCH, tiny_dataset, fanouts=FANOUTS,
+                              batch_size=64, hidden=16, epochs=1,
+                              tune=False)
+    srv = make_server(res.final_params, tiny_dataset)
+    return res.final_params, srv.offline_logits()
+
+
+def make_server(params, ds, **kw):
+    kw.setdefault("arch", ARCH)
+    kw.setdefault("fanouts", FANOUTS)
+    kw.setdefault("tune", False)
+    kw.setdefault("start", False)
+    kw.setdefault("cache_capacity", 256)
+    return GNNServer(params, ds, **kw)
+
+
+def serve_once(srv, seeds):
+    t = srv.submit(seeds)
+    srv.run_pending(force=True)
+    return t.result(10.0)
+
+
+# ---------------------------------------------------------------------------
+# parity vs offline inference
+# ---------------------------------------------------------------------------
+
+def test_full_mode_bitwise_parity(served, tiny_dataset):
+    params, off = served
+    srv = make_server(params, tiny_dataset)
+    for seeds in ([3, 7, 11], [0], list(range(20, 52))):
+        out = serve_once(srv, seeds)
+        assert out.shape == (len(seeds), off.shape[1])
+        assert np.array_equal(out, off[np.asarray(seeds)])
+
+
+def test_cache_hit_bitwise_identical(served, tiny_dataset):
+    params, off = served
+    srv = make_server(params, tiny_dataset)
+    seeds = [5, 9, 13]
+    first = serve_once(srv, seeds)
+    assert srv.cache.stats.hits == 0       # cold cache: all misses
+    again = serve_once(srv, seeds)
+    assert srv.cache.stats.hits > 0        # warm: the ego net is resident
+    assert np.array_equal(first, again)
+    assert np.array_equal(again, off[np.asarray(seeds)])
+
+
+def test_cache_on_vs_off_identical(served, tiny_dataset):
+    params, off = served
+    on = make_server(params, tiny_dataset, cache_capacity=512)
+    offsrv = make_server(params, tiny_dataset, cache_capacity=0)
+    for seeds in ([1, 2], [2, 3, 4], [1, 2], [40, 41, 42, 43]):
+        a, b = serve_once(on, seeds), serve_once(offsrv, seeds)
+        assert np.array_equal(a, b)
+        assert np.array_equal(a, off[np.asarray(seeds)])
+    assert offsrv.cache.stats.insertions == 0
+    assert on.cache.stats.hits > 0
+
+
+def test_coalesced_equals_solo(served, tiny_dataset):
+    params, off = served
+    srv = make_server(params, tiny_dataset, max_batch=32)
+    ts = [srv.submit(s) for s in ([2, 4], [4, 6, 8], [10])]
+    assert srv.run_pending(force=True) == 1        # one coalesced flush
+    solo = make_server(params, tiny_dataset)
+    for t, seeds in zip(ts, ([2, 4], [4, 6, 8], [10])):
+        got = t.result(10.0)
+        assert np.array_equal(got, serve_once(solo, seeds))
+        assert np.array_equal(got, off[np.asarray(seeds)])
+
+
+def test_sampled_mode_deterministic_replay(served, tiny_dataset):
+    params, _ = served
+    outs = []
+    for cap in (0, 128):       # cache state must not leak into sampling
+        srv = make_server(params, tiny_dataset, mode="sampled",
+                          cache_capacity=cap)
+        outs.append(serve_once(srv, [5, 9, 30]))
+    assert np.array_equal(outs[0], outs[1])
+
+
+def test_sampled_covering_fanout_matches_exact(served, tiny_dataset):
+    # without replacement, a fanout >= max degree keeps every edge — the
+    # sampled answer equals the exact one to float tolerance (edge order
+    # differs, so bitwise equality is not expected)
+    params, off = served
+    deg = int(np.bincount(np.asarray(tiny_dataset.coo.row)).max())
+    srv = make_server(params, tiny_dataset, mode="sampled",
+                      fanouts=(deg, deg))
+    seeds = [7, 8, 9]
+    np.testing.assert_allclose(serve_once(srv, seeds),
+                               off[np.asarray(seeds)], rtol=1e-4, atol=1e-5)
+
+
+def test_historical_mode_bitwise_parity(served, tiny_dataset):
+    params, off = served
+    srv = make_server(params, tiny_dataset, mode="historical")
+    for seeds in ([1, 2, 3], [1, 2, 3], [50, 60]):
+        assert np.array_equal(serve_once(srv, seeds),
+                              off[np.asarray(seeds)])
+    assert srv.cache.stats.hits > 0
+
+
+def test_historical_refresh_tracks_new_params(served, tiny_dataset):
+    import jax
+    params, off = served
+    srv = make_server(params, tiny_dataset, mode="historical")
+    serve_once(srv, [4, 5, 6])                     # warm the stale cache
+    new_params = jax.tree_util.tree_map(lambda w: w * 1.25, params)
+    srv.params = new_params
+    srv.refresh_embeddings()
+    got = serve_once(srv, [4, 5, 6])
+    new_off = make_server(new_params, tiny_dataset).offline_logits()
+    assert np.array_equal(got, new_off[[4, 5, 6]])
+    assert not np.array_equal(got, off[[4, 5, 6]])
+    assert srv.cache.stats.stale > 0               # old-epoch entries refilled
+    srv.cache.check_consistency()
+
+
+def test_tuned_plans_parity_within_tolerance(served, tiny_dataset):
+    # tune=True may route serving and offline buckets through different
+    # kernel plans (ELL vs SELL vs trusted) — same math, different
+    # reduction orders, so tolerance instead of bit equality
+    params, _ = served
+    srv = make_server(params, tiny_dataset, tune=True)
+    off = srv.offline_logits()
+    seeds = [3, 14, 15, 92]
+    np.testing.assert_allclose(serve_once(srv, seeds),
+                               off[np.asarray(seeds)], rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher queueing properties (hypothesis-style)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25)
+@given(seed=st.integers(0, 10_000), max_batch=st.integers(1, 12))
+def test_batcher_never_drops_or_duplicates(seed, max_batch):
+    rnd = random.Random(seed)
+    clock = [0.0]
+    mb = MicroBatcher(max_batch, 0.05, time_fn=lambda: clock[0])
+    tickets, flushes = [], []
+    for _ in range(rnd.randint(1, 30)):
+        size = rnd.randint(1, max_batch)
+        tickets.append(mb.submit(rnd.sample(range(10_000), size)))
+        clock[0] += rnd.random() * 0.02
+        if rnd.random() < 0.5:
+            while (fl := mb.next_flush()) is not None:
+                flushes.append(fl)
+    clock[0] += 1.0                                # SLO forces the tail out
+    while (fl := mb.next_flush()) is not None:
+        flushes.append(fl)
+    assert mb.pending() == 0
+    # exactly-once, FIFO: flush concatenation replays the submission order
+    assert [t for fl in flushes for t in fl.tickets] == tickets
+    for fl in flushes:
+        assert 1 <= fl.n_real <= max_batch
+        assert np.array_equal(
+            fl.seeds, np.concatenate([t.seeds for t in fl.tickets]))
+    assert [fl.index for fl in flushes] == list(range(len(flushes)))
+
+
+@settings(max_examples=25)
+@given(seed=st.integers(0, 10_000), max_delay=st.floats(0.0, 0.1))
+def test_batcher_slo_never_violated_while_polled(seed, max_delay):
+    # a polled consumer composes every request into a flush no later
+    # than submit + max_delay (+ one poll step of slack)
+    rnd = random.Random(seed)
+    step = 0.003
+    clock = [0.0]
+    mb = MicroBatcher(8, max_delay, time_fn=lambda: clock[0])
+    pending = rnd.randint(1, 25)
+    while pending or mb.pending():
+        if pending and rnd.random() < 0.4:
+            pending -= 1
+            mb.submit(rnd.sample(range(10_000), rnd.randint(1, 8)))
+        while (fl := mb.next_flush()) is not None:
+            for t in fl.tickets:
+                assert clock[0] - t.submitted_at <= max_delay + step + 1e-9
+        clock[0] += step
+
+
+def test_batcher_full_batch_flushes_immediately():
+    clock = [0.0]
+    mb = MicroBatcher(4, 10.0, time_fn=lambda: clock[0])
+    mb.submit([1, 2])
+    assert not mb.ready()                  # underfull, SLO far away
+    mb.submit([3, 4])
+    assert mb.ready()                      # size trigger, zero time passed
+    fl = mb.next_flush()
+    assert fl.n_real == 4 and mb.pending() == 0
+
+
+@settings(max_examples=20)
+@given(sizes=st.integers(1, 64))
+def test_batcher_bucket_is_deterministic_in_composition(sizes):
+    clock = [0.0]
+    a = MicroBatcher(64, 0.0, time_fn=lambda: clock[0])
+    b = MicroBatcher(64, 0.0, time_fn=lambda: clock[0])
+    for mb in (a, b):
+        mb.submit(list(range(sizes)))
+    fa, fb = a.next_flush(), b.next_flush()
+    assert fa.bucket == fb.bucket == round_bucket(sizes, base=a.bucket_base)
+
+
+def test_batcher_rejects_bad_requests(served, tiny_dataset):
+    mb = MicroBatcher(4, 0.01)
+    with pytest.raises(ValueError):
+        mb.submit([])
+    with pytest.raises(ValueError):
+        mb.submit([1, 2, 3, 4, 5])         # > max_batch: split client-side
+    params, _ = served
+    srv = make_server(params, tiny_dataset)
+    with pytest.raises(ValueError):
+        srv.submit([0, srv.num_nodes])     # out of range
+    with pytest.raises(ValueError):
+        srv.submit([3, 3])                 # duplicate ids in one request
+    assert srv.batcher.pending() == 0      # nothing half-enqueued
+
+
+def test_ticket_result_timeout():
+    mb = MicroBatcher(4, 10.0)
+    t = mb.submit([1])
+    with pytest.raises(TimeoutError):
+        t.result(0.01)                     # never flushed -> caller times out
+
+
+# ---------------------------------------------------------------------------
+# feature cache
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def fb(rng):
+    return rng.normal(size=(50, 8)).astype(np.float32)
+
+
+def test_cache_lru_eviction_order(fb):
+    c = FeatureCache(fb, 3)
+    for i in (0, 1, 2):
+        c.gather([i])
+    assert c.cached_ids() == [0, 1, 2]
+    c.gather([0])                          # refresh: 0 becomes most-recent
+    c.gather([3])                          # evicts 1, the LRU
+    assert c.cached_ids() == [2, 0, 3]
+    assert c.stats.evictions == 1
+    got = np.asarray(c.gather([1, 2]))     # 1 misses, 2 hits
+    assert np.array_equal(got, fb[[1, 2]])
+    c.check_consistency()
+
+
+def test_cache_degenerate_capacities(fb, rng):
+    c0 = FeatureCache(fb, 0)
+    c1 = FeatureCache(fb, 1)
+    for _ in range(60):
+        ids = rng.choice(51, size=5, replace=False)   # 50 = pad sentinel
+        want = np.asarray(c0.gather_reference(ids))
+        assert np.array_equal(np.asarray(c0.gather(ids)), want)
+        assert np.array_equal(np.asarray(c1.gather(ids)), want)
+    assert c0.stats.insertions == 0 and c0.stats.hits == 0
+    assert len(c1.cached_ids()) == 1
+    c1.check_consistency()
+
+
+def test_cache_stale_epoch_invalidation(fb):
+    c = FeatureCache(fb, 8)
+    c.gather([0, 1, 2])
+    fb2 = fb + 1.0
+    c.set_epoch(1, fallback=fb2)
+    got = np.asarray(c.gather([0, 1, 5]))
+    assert np.array_equal(got, fb2[[0, 1, 5]])   # stale entries NOT served
+    assert c.stats.stale >= 2
+    # the refill re-stamped them: second gather is all hits, still new rows
+    h0 = c.stats.hits
+    assert np.array_equal(np.asarray(c.gather([0, 1, 5])), fb2[[0, 1, 5]])
+    assert c.stats.hits == h0 + 3
+    c.check_consistency()
+
+
+def test_cache_fallback_gather_equivalence(fb, rng):
+    c = FeatureCache(fb, 4)               # heavy eviction traffic
+    for _ in range(150):
+        ids = rng.choice(51, size=6, replace=False)
+        assert np.array_equal(np.asarray(c.gather(ids)),
+                              np.asarray(c.gather_reference(ids)))
+    assert c.stats.evictions > 0
+    c.check_consistency()
+
+
+def test_cache_hit_accounting(fb):
+    c = FeatureCache(fb, 16)
+    c.gather([1, 2, 3, 50])               # sentinel id: neither hit nor miss
+    assert (c.stats.hits, c.stats.misses) == (0, 3)
+    c.gather([1, 2, 3])
+    assert (c.stats.hits, c.stats.misses) == (3, 3)
+    assert c.stats.hit_rate == 0.5
+
+
+# ---------------------------------------------------------------------------
+# faults + concurrency
+# ---------------------------------------------------------------------------
+
+def test_flush_exception_fails_tickets_not_server(served, tiny_dataset):
+    params, off = served
+    srv = make_server(params, tiny_dataset,
+                      faults=FaultPlan(flush_exception_at=1))
+    assert np.array_equal(serve_once(srv, [1, 2]), off[[1, 2]])  # flush 0 ok
+    t = srv.submit([3, 4])
+    srv.run_pending(force=True)                                  # flush 1 dies
+    with pytest.raises(InjectedFault):
+        t.result(5.0)
+    assert srv.flush_errors == 1
+    # the server keeps serving, and the cache survived the mid-serve
+    # exception with every committed row intact (gather-back verified)
+    srv.cache.check_consistency()
+    assert np.array_equal(serve_once(srv, [3, 4]), off[[3, 4]])
+    assert srv.flushes == 3 and srv.flush_errors == 1
+
+
+def test_abandoned_request_does_not_wedge_batcher(served, tiny_dataset):
+    # a client that submits and dies never collects its ticket; the SLO
+    # deadline still flushes it (padded, underfull) and later clients
+    # are unaffected
+    params, off = served
+    srv = GNNServer(params, tiny_dataset, arch=ARCH, fanouts=FANOUTS,
+                    tune=False, max_batch=64, max_delay_s=0.01,
+                    cache_capacity=256, start=True)
+    try:
+        abandoned = srv.submit([9])        # nobody ever waits on this
+        out = srv.predict([10, 11], timeout=30.0)
+        assert np.array_equal(out, off[[10, 11]])
+        assert abandoned.result(30.0).shape == (1, off.shape[1])
+        assert max(srv.flush_sizes) < 64   # deadline-padded, not size-full
+    finally:
+        srv.stop()
+
+
+def test_concurrent_predict_threads(served, tiny_dataset):
+    from concurrent.futures import ThreadPoolExecutor
+    params, off = served
+    with GNNServer(params, tiny_dataset, arch=ARCH, fanouts=FANOUTS,
+                   tune=False, max_batch=16, max_delay_s=0.005,
+                   cache_capacity=512) as srv:
+        with ThreadPoolExecutor(8) as ex:
+            futs = [ex.submit(srv.predict, [i, i + 40], 60.0)
+                    for i in range(24)]
+            outs = [f.result() for f in futs]
+        stats = srv.latency_stats()
+    for i, out in enumerate(outs):
+        assert np.array_equal(out, off[[i, i + 40]])
+    assert stats["requests"] == 24
+    assert stats["flushes"] <= 24          # coalescing actually happened
+
+
+def test_stop_drains_queued_requests(served, tiny_dataset):
+    params, off = served
+    srv = make_server(params, tiny_dataset)       # start=False: no loop
+    t = srv.submit([6, 7])
+    srv.stop()                                    # must answer, not drop
+    assert np.array_equal(t.result(5.0), off[[6, 7]])
+
+
+def test_smoke_50_requests_meet_slo(served, tiny_dataset):
+    # the CI smoke: 50 synthetic requests against a live server; every
+    # answer parity-checked, post-warmup p99 within the serving budget
+    # (SLO + a CPU model-time allowance)
+    from concurrent.futures import ThreadPoolExecutor
+    params, off = served
+    rng = np.random.default_rng(7)
+    reqs = [rng.choice(off.shape[0], size=2, replace=False)
+            for _ in range(50)]
+    with GNNServer(params, tiny_dataset, arch=ARCH, fanouts=FANOUTS,
+                   tune=False, max_batch=8, max_delay_s=0.02,
+                   cache_capacity=1024) as srv:
+        # warmup = the same concurrent workload once, so every bucket
+        # signature the measured pass can compose is already compiled
+        with ThreadPoolExecutor(4) as ex:
+            list(ex.map(lambda r: srv.predict(r, timeout=60.0), reqs))
+        warm = srv.latency_stats()["requests"]
+        with srv._lock:
+            srv.latencies_s.clear()
+        with ThreadPoolExecutor(4) as ex:
+            outs = list(ex.map(lambda r: srv.predict(r, timeout=60.0), reqs))
+        stats = srv.latency_stats()
+    for r, out in zip(reqs, outs):
+        assert np.array_equal(out, off[r])
+    assert stats["requests"] - warm == 50
+    assert stats["p99_ms"] < 20.0 + 300.0, stats   # SLO + model allowance
+    assert stats["cache_hit_rate"] > 0.2

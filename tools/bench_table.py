@@ -141,6 +141,31 @@ def dist2d_table() -> str:
     return "\n".join(lines)
 
 
+def serving_table() -> str:
+    run = _last_run("serving")
+    if run is None:
+        return "_no BENCH_serving.json trajectory committed_"
+    qps = [r for r in run["rows"] if r.get("kind") == "qps"]
+    par = [r for r in run["rows"] if r.get("kind") == "parity"]
+    lines = ["| concurrency | cache rows | p50 | p99 | QPS | hit rate | "
+             "mean flush |",
+             "|---|---|---|---|---|---|---|"]
+    for r in qps:
+        lines.append(
+            f"| {r['concurrency']} | {r['cache_rows']} | "
+            f"{r['p50_ms']:.1f} ms | {r['p99_ms']:.1f} ms | "
+            f"{r['qps']:.0f} | {r['hit_rate']:.0%} | "
+            f"{r['mean_flush']:.0f} |")
+    tail = (f"\n_closed-loop clients, sampled mode, zipf-skewed seeds "
+            f"({qps[0]['requests']} requests x {qps[0]['req_size']} seeds); "
+            f"run at `{run['git']}` ({run['ts']})." if qps else "\n_")
+    if par:
+        tail += (f" Parity row: full-neighbor served logits bitwise equal "
+                 f"offline inference = **{par[0]['bitwise']}**.")
+    lines.append(tail + "_")
+    return "\n".join(lines)
+
+
 def main() -> None:
     print("### Kernel-level (SpMM / SDDMM / FusedMM)\n")
     print(kernel_table())
@@ -150,6 +175,8 @@ def main() -> None:
     print(sampling_table())
     print("\n### Distributed SpMM (1-D bands vs 2-D vertex cut)\n")
     print(dist2d_table())
+    print("\n### Online inference serving (micro-batched, feature cache)\n")
+    print(serving_table())
 
 
 if __name__ == "__main__":
