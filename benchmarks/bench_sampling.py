@@ -108,6 +108,35 @@ def run(datasets=("reddit",), scale=1 / 32, archs=("sage-mean",),
                      f"sample={sr.sample_time_s:.3f}s;"
                      f"traces={sr.n_traces}/{sr.n_buckets};"
                      f"acc={sr.test_acc:.3f}")
+            # profiled pass (kind='stages' rows): one epoch under the obs
+            # tracer, per-stage wall-time attribution from the span
+            # timeline. Loader stages run on the prefetch daemon thread
+            # concurrently with the device step, so stage fractions can
+            # legitimately sum past 1.0.
+            from repro import obs
+            with obs.profiled(ops=True):
+                train_gnn_minibatch(arch, ds, fanouts=fanouts,
+                                    batch_size=batch_size, hidden=hidden,
+                                    epochs=1, seed=0, profile=True)
+            spans = obs.get_tracer().snapshot()
+            agg: dict[str, tuple[int, int]] = {}
+            for s in spans:
+                if s.dur_ns and s.name != "train.epoch":
+                    tot, n = agg.get(s.name, (0, 0))
+                    agg[s.name] = (tot + s.dur_ns, n + 1)
+            wall_s = sum(s.dur_ns for s in spans
+                         if s.name == "train.epoch") / 1e9
+            for stage, (tot, n) in sorted(agg.items(),
+                                          key=lambda kv: -kv[1][0]):
+                rows.append(dict(
+                    kind="stages", dataset=dname, arch=arch, scale=scale,
+                    stage=stage, total_s=tot / 1e9, count=n,
+                    mean_s=tot / n / 1e9,
+                    frac_epoch=(tot / 1e9 / wall_s) if wall_s else 0.0))
+                emit(f"sampling/{dname}/{arch}/stage-{stage}",
+                     tot / n / 1e9,
+                     f"total={tot / 1e9:.3f}s;n={n};"
+                     f"frac={(tot / 1e9 / wall_s) if wall_s else 0.0:.2f}")
             # checkpointing overhead: async saves every 10 steps vs none
             ckpt_every = 10
             with tempfile.TemporaryDirectory() as ckdir:

@@ -378,12 +378,15 @@ def autotune(a, k_hint: int = 128, *, hw: HardwareModel | None = None,
 
     trusted = KernelPlan.trusted(k_hint)
     t_trusted = estimate_plan_time(stats, k_hint, trusted, hw)
+    evaluated: list = [("trusted", t_trusted)]
 
     lane_aligned = k_hint % hw.lane == 0
     mxu_semiring = semiring_reduce in ("sum", "mean")
     if not (lane_aligned and mxu_semiring):
         plan = dataclasses.replace(trusted, est_trusted_s=t_trusted,
                                    est_generated_s=float("inf"))
+        _log_sweep(stats, k_hint, semiring_reduce, evaluated, plan,
+                   gated="lane" if not lane_aligned else "semiring")
         if measure:     # record a measured trusted row for this semiring
             plan = _measure_override(a, k_hint, plan, stats, hw=hw,
                                      semiring=semiring_reduce)
@@ -399,6 +402,7 @@ def autotune(a, k_hint: int = 128, *, hw: HardwareModel | None = None,
             continue
         cand = KernelPlan(kind="bsr", br=br, bc=bc, fk=fk, k_hint=k_hint)
         t = estimate_plan_time(stats, k_hint, cand, hw)
+        evaluated.append((f"bsr{br}x{bc}", t))
         if t < best_t:
             best_t = t
             best = dataclasses.replace(cand, est_generated_s=t,
@@ -408,6 +412,7 @@ def autotune(a, k_hint: int = 128, *, hw: HardwareModel | None = None,
     if stats.max_deg <= max(4 * stats.avg_deg, 8):
         cand = KernelPlan(kind="ell", k_hint=k_hint)
         t = estimate_plan_time(stats, k_hint, cand, hw)
+        evaluated.append(("ell", t))
         if t < best_t:
             best_t = t
             best = dataclasses.replace(cand, est_generated_s=t,
@@ -422,15 +427,44 @@ def autotune(a, k_hint: int = 128, *, hw: HardwareModel | None = None,
         cand = KernelPlan(kind="sell", sell_c=c, sell_sigma=sigma,
                           k_hint=k_hint)
         t = estimate_plan_time(stats, k_hint, cand, hw)
+        evaluated.append((f"sellc{c}s{sigma}", t))
         if t < best_t:
             best_t = t
             best = dataclasses.replace(cand, est_generated_s=t,
                                        est_trusted_s=t_trusted)
 
+    _log_sweep(stats, k_hint, semiring_reduce, evaluated, best)
     if measure:
         best = _measure_override(a, k_hint, best, stats, hw=hw,
                                  semiring=semiring_reduce)
     return best
+
+
+def _plan_label(plan: KernelPlan) -> str:
+    """Short human-readable plan tag used in decision logs and summaries."""
+    if plan.kind == "bsr":
+        return f"bsr{plan.br}x{plan.bc}"
+    if plan.kind == "sell":
+        return f"sellc{plan.sell_c}s{plan.sell_sigma}"
+    return plan.kind
+
+
+def _log_sweep(stats: GraphStats, k: int, semiring: str, evaluated: list,
+               winner: KernelPlan, *, gated: str | None = None) -> None:
+    """Emit one ``tuning.sweep`` decision event (analytic pass) — every
+    candidate with its estimated seconds, plus the pick. No-op unless the
+    obs tracer is enabled; always bumps the sweep counter."""
+    from repro import obs
+    obs.metrics().counter("tuning.sweeps").inc()
+    if not obs.enabled():
+        return
+    attrs = dict(
+        graph=f"{stats.nrows}x{stats.ncols}nse{stats.nse}", k=k,
+        semiring=semiring, winner=_plan_label(winner),
+        candidates=[[name, float(t)] for name, t in evaluated])
+    if gated:
+        attrs["gated"] = gated
+    obs.instant("tuning.sweep", **attrs)
 
 
 def _time_callable(fn: Callable, *args, reps: int = 3) -> float:
@@ -526,17 +560,37 @@ def _measure_override(a, k: int, plan: KernelPlan, stats: GraphStats, *,
         if ell_bounded and not any(p.kind == "ell" for p in candidates):
             candidates.append(KernelPlan(kind="ell", k_hint=k))
 
+    timed: list = [("trusted", t_trusted)]
     best, best_t = None, float("inf")
     for cand in candidates:
         t = _measure_plan(a, cand, h, sr, inv_deg=inv_deg)
+        timed.append((_plan_label(cand), t))
         if t < best_t:
             best, best_t = cand, t
 
     if best is not None and best_t <= t_trusted:
-        return dataclasses.replace(best, est_generated_s=best_t,
-                                   est_trusted_s=t_trusted)
-    return KernelPlan(kind="trusted", k_hint=k,
-                      est_generated_s=best_t, est_trusted_s=t_trusted)
+        winner = dataclasses.replace(best, est_generated_s=best_t,
+                                     est_trusted_s=t_trusted)
+    else:
+        winner = KernelPlan(kind="trusted", k_hint=k,
+                            est_generated_s=best_t, est_trusted_s=t_trusted)
+    _log_measured(stats, k, semiring, timed, winner)
+    return winner
+
+
+def _log_measured(stats: GraphStats, k: int, semiring: str, timed: list,
+                  winner: KernelPlan) -> None:
+    """Emit one ``tuning.measure`` decision event (wall-clock override):
+    each timed candidate's measured seconds and the empirical pick."""
+    from repro import obs
+    obs.metrics().counter("tuning.measured").inc()
+    if not obs.enabled():
+        return
+    obs.instant(
+        "tuning.measure",
+        graph=f"{stats.nrows}x{stats.ncols}nse{stats.nse}", k=k,
+        semiring=semiring, winner=_plan_label(winner),
+        candidates=[[name, float(t)] for name, t in timed])
 
 
 # --------------------------------------------------------------------------

@@ -88,18 +88,30 @@ def build_cached_graph(a: sp.COO, *, k_hint: int = 128,
     deg = sp.row_degrees(a)
     deg_t = sp.row_degrees(a_t)
 
+    from repro import obs
+    source = "caller"
     if plan is None:
         if db is not None:
             plan = db.get(a, k_hint, semiring=semiring_reduce)
+            source = "db"
+            obs.metrics().counter(
+                "tuning.db.hit" if plan is not None
+                else "tuning.db.miss").inc()
         if plan is None:
             if tune:
                 plan = autotune(a, k_hint, measure=measure,
                                 semiring_reduce=semiring_reduce)
+                source = "measure" if measure else "sweep"
                 if db is not None:
                     db.put(a, k_hint, plan, semiring=semiring_reduce)
                     db.save()
             else:
                 plan = KernelPlan.trusted()
+                source = "untuned"
+    if obs.enabled():
+        obs.instant("tuning.plan", site="build_cached_graph", source=source,
+                    kind=plan.kind, k=k_hint, semiring=semiring_reduce,
+                    graph=f"{a.nrows}x{a.ncols}nse{a.nse}")
 
     bsr = bsr_t = None
     if plan.wants_bsr:

@@ -13,6 +13,15 @@ Because jitted functions close over the binding at *trace* time, patch state
 is part of the cache key: we bump a version counter that layers fold into
 their static config, so switching patch state retraces rather than silently
 reusing stale kernels.
+
+Profile mode (``repro.obs``): when op profiling is enabled
+(``obs.enable(ops=True)`` / ``obs.profiled()``), ``resolve`` hands back a
+recording wrapper — every dispatch through the registry logs the op name,
+operand shapes, and whether the tuned or baseline binding served it, with
+``block_until_ready`` wall time when the call executes eagerly (inside a
+``jit`` trace the record is a trace-time instant marker — see
+``obs.op_record``). Disabled, ``resolve`` returns the raw callable: the
+hot path pays one module-flag check at trace time only.
 """
 from __future__ import annotations
 
@@ -47,6 +56,14 @@ def patch_version() -> int:
     return _VERSION
 
 
+def bump_version() -> None:
+    """Invalidate traced-in bindings without changing patch state. The
+    obs layer calls this when op profiling toggles, so jitted callers
+    re-resolve and pick up (or shed) the recording wrapper."""
+    global _VERSION
+    _VERSION += 1
+
+
 def patch() -> None:
     """Route every registered op to the tuned implementation."""
     global _ACTIVE, _VERSION
@@ -75,12 +92,31 @@ def patched(enable: bool = True):
 def resolve(name: str) -> Callable:
     """The binding GNN layers call at trace time."""
     table = _TUNED if _ACTIVE else _BASELINE
+    variant = "tuned" if _ACTIVE else "baseline"
     if name not in table:
         other = _BASELINE if _ACTIVE else _TUNED
         if name in other:   # graceful: fall through to whichever exists
-            return other[name]
-        raise KeyError(f"op {name!r} is not registered")
-    return table[name]
+            table, variant = other, ("baseline" if _ACTIVE else "tuned")
+        else:
+            raise KeyError(f"op {name!r} is not registered")
+    fn = table[name]
+    from repro.obs import op_profiling_enabled
+    if op_profiling_enabled():
+        return _profiled_binding(name, variant, fn)
+    return fn
+
+
+def _profiled_binding(name: str, variant: str, fn: Callable) -> Callable:
+    """Recording wrapper handed out by ``resolve`` in profile-ops mode."""
+    from repro.obs import op_record, op_t0
+
+    @functools.wraps(fn)
+    def recorded(*args, **kwargs):
+        t0 = op_t0()
+        out = fn(*args, **kwargs)
+        op_record(name, out, *args, t0_ns=t0, variant=variant)
+        return out
+    return recorded
 
 
 def patch_fn(fn: Callable) -> Callable:

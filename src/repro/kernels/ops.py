@@ -6,6 +6,13 @@ operation dispatches to an XLA path that preserves the *algorithmic* choice
 (block-sparse matmuls for BSR, gathers for ELL) so CPU wall-clock benches
 remain an honest proxy for the kernel-selection logic. ``interpret=True``
 forces the Pallas body through the interpreter for correctness tests.
+
+Profile-ops mode (``repro.obs``): every dispatcher below records one
+``op.<name>`` event per call — operand shapes, backend, and (for eager
+calls) ``block_until_ready`` wall time; calls made under an active ``jit``
+trace record an ``op.<name>.trace`` instant instead, since wall time there
+would measure tracing. Disabled (the default), the cost is one module-flag
+check per dispatch.
 """
 from __future__ import annotations
 
@@ -15,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sparse import BSR, COO, ELL, SELL
+from repro.obs import op_record, op_t0
 
 __all__ = [
     "on_tpu",
@@ -67,11 +75,16 @@ def bsr_spmm(a: BSR, h: jnp.ndarray, *, fk: int = 256,
     """
     if h.shape[0] != a.ncols:
         h = jnp.pad(h, ((0, a.ncols - h.shape[0]), (0, 0)))
+    t0 = op_t0()
     use_pallas = on_tpu() if interpret is None else True
     if use_pallas:
         from repro.kernels.bsr_spmm import bsr_spmm_pallas
-        return bsr_spmm_pallas(a, h, fk=fk, interpret=bool(interpret))
-    return bsr_spmm_xla(a, h)
+        out = bsr_spmm_pallas(a, h, fk=fk, interpret=bool(interpret))
+    else:
+        out = bsr_spmm_xla(a, h)
+    op_record("bsr_spmm", out, a.blocks, h, t0_ns=t0,
+              backend="pallas" if use_pallas else "xla")
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -86,13 +99,18 @@ def ell_spmm(a: ELL, h: jnp.ndarray, *, interpret: bool | None = None
     count (≠ nrows). Pallas gather kernel on TPU, the jnp oracle
     elsewhere; ``interpret=True`` forces the Pallas body through the
     interpreter."""
+    t0 = op_t0()
     use_pallas = on_tpu() if interpret is None else True
     if use_pallas:
         from repro.kernels.ell_spmm import ell_spmm_pallas
-        return ell_spmm_pallas(a, h, interpret=bool(interpret))
-    from repro.kernels.ref import spmm_ell_ref
-    from repro.core.semiring import get_semiring
-    return spmm_ell_ref(a, h, get_semiring("sum"))
+        out = ell_spmm_pallas(a, h, interpret=bool(interpret))
+    else:
+        from repro.kernels.ref import spmm_ell_ref
+        from repro.core.semiring import get_semiring
+        out = spmm_ell_ref(a, h, get_semiring("sum"))
+    op_record("ell_spmm", out, a.idx, h, t0_ns=t0,
+              backend="pallas" if use_pallas else "xla")
+    return out
 
 
 def gathered_ell_spmm(a: ELL, h_full: jnp.ndarray, src_ids: jnp.ndarray
@@ -109,11 +127,14 @@ def gathered_ell_spmm(a: ELL, h_full: jnp.ndarray, src_ids: jnp.ndarray
     zero row) and carry ``val == 0``, so they stay doubly inert. Sum
     semiring, like :func:`ell_spmm`.
     """
+    t0 = op_t0()
     gid = jnp.take(src_ids, a.idx, mode="fill",
                    fill_value=h_full.shape[0])
     gathered = jnp.take(h_full, gid, axis=0, mode="fill",
                         fill_value=0)                      # (N, D, K)
-    return (a.val[:, :, None].astype(gathered.dtype) * gathered).sum(axis=1)
+    out = (a.val[:, :, None].astype(gathered.dtype) * gathered).sum(axis=1)
+    op_record("gathered_ell_spmm", out, a.idx, h_full, src_ids, t0_ns=t0)
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -121,6 +142,13 @@ def gathered_ell_spmm(a: ELL, h_full: jnp.ndarray, src_ids: jnp.ndarray
 # --------------------------------------------------------------------------
 
 @jax.jit
+def _slot_gather_jit(table: jnp.ndarray, slots: jnp.ndarray,
+                     rows: jnp.ndarray) -> jnp.ndarray:
+    safe = jnp.clip(slots, 0, table.shape[0] - 1)
+    hit = jnp.take(table, safe, axis=0)
+    return jnp.where((slots >= 0)[:, None], hit, rows)
+
+
 def slot_gather(table: jnp.ndarray, slots: jnp.ndarray,
                 rows: jnp.ndarray) -> jnp.ndarray:
     """Row-wise select between a device-resident cache table and staged
@@ -134,12 +162,19 @@ def slot_gather(table: jnp.ndarray, slots: jnp.ndarray,
     ``slots`` out-of-range on the miss lanes is clamped before the gather
     so the table fetch stays in-bounds (the lane's value is discarded by
     the select)."""
-    safe = jnp.clip(slots, 0, table.shape[0] - 1)
-    hit = jnp.take(table, safe, axis=0)
-    return jnp.where((slots >= 0)[:, None], hit, rows)
+    t0 = op_t0()
+    out = _slot_gather_jit(table, slots, rows)
+    op_record("slot_gather", out, table, slots, rows, t0_ns=t0)
+    return out
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
+def _table_insert_jit(table: jnp.ndarray, slots: jnp.ndarray,
+                      rows: jnp.ndarray) -> jnp.ndarray:
+    return table.at[jnp.where(slots >= 0, slots, table.shape[0])].set(rows,
+                                                                      mode="drop")
+
+
 def table_insert(table: jnp.ndarray, slots: jnp.ndarray,
                  rows: jnp.ndarray) -> jnp.ndarray:
     """Scatter miss rows into their assigned cache slots:
@@ -147,8 +182,10 @@ def table_insert(table: jnp.ndarray, slots: jnp.ndarray,
     insertion is an in-place device scatter, not a table-sized copy.
     Out-of-range slots (< 0, the "no insert" lane) drop silently via
     scatter's OOB semantics."""
-    return table.at[jnp.where(slots >= 0, slots, table.shape[0])].set(rows,
-                                                                      mode="drop")
+    t0 = op_t0()
+    out = _table_insert_jit(table, slots, rows)
+    op_record("table_insert", out, slots, rows, t0_ns=t0)
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -188,11 +225,16 @@ def sell_spmm(a: SELL, h: jnp.ndarray, *, interpret: bool | None = None
     """(a.nrows, K) = a @ h over SELL-C-σ packed slices (sum semiring),
     output already un-sorted back to original row order via ``inv_perm``.
     Pallas kernel on TPU, :func:`sell_spmm_xla` elsewhere."""
+    t0 = op_t0()
     use_pallas = on_tpu() if interpret is None else True
     if use_pallas:
         from repro.kernels.sell_spmm import sell_spmm_pallas
-        return sell_spmm_pallas(a, h, interpret=bool(interpret))
-    return sell_spmm_xla(a, h)
+        out = sell_spmm_pallas(a, h, interpret=bool(interpret))
+    else:
+        out = sell_spmm_xla(a, h)
+    op_record("sell_spmm", out, a.idx, h, t0_ns=t0,
+              backend="pallas" if use_pallas else "xla")
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -205,13 +247,18 @@ def sddmm_bsr(a: BSR, x: jnp.ndarray, y: jnp.ndarray, *,
     """Sampled dense-dense matmul over A's block pattern: returns
     (nblocks, br, bc) per-block scores x_i . y_j, optionally scaled by A's
     stored values. MXU-tiled Pallas kernel on TPU, vmapped XLA otherwise."""
+    t0 = op_t0()
     use_pallas = on_tpu() if interpret is None else True
     if use_pallas:
         from repro.kernels.sddmm import sddmm_bsr_pallas
-        return sddmm_bsr_pallas(a, x, y, scale_by_a=scale_by_a,
-                                interpret=bool(interpret))
-    from repro.kernels.ref import sddmm_bsr_ref
-    return sddmm_bsr_ref(a, x, y, scale_by_a=scale_by_a)
+        out = sddmm_bsr_pallas(a, x, y, scale_by_a=scale_by_a,
+                               interpret=bool(interpret))
+    else:
+        from repro.kernels.ref import sddmm_bsr_ref
+        out = sddmm_bsr_ref(a, x, y, scale_by_a=scale_by_a)
+    op_record("sddmm", out, a.blocks, x, y, t0_ns=t0,
+              backend="pallas" if use_pallas else "xla")
+    return out
 
 
 def fusedmm_bsr(a: BSR, x: jnp.ndarray, y: jnp.ndarray, h: jnp.ndarray, *,
@@ -220,11 +267,20 @@ def fusedmm_bsr(a: BSR, x: jnp.ndarray, y: jnp.ndarray, h: jnp.ndarray, *,
     """Fused SDDMM -> edge op -> SpMM over BSR tiles: out[i] = sum_j
     f(x_i . y_j) h_j without materializing the edge tensor in HBM
     (paper §3.4 / FusedMM). ``edge_op``: softmax | sigmoid | none."""
+    t0 = op_t0()
     use_pallas = on_tpu() if interpret is None else True
     if use_pallas:
         from repro.kernels.fusedmm import fusedmm_bsr_pallas
-        return fusedmm_bsr_pallas(a, x, y, h, edge_op=edge_op,
-                                  interpret=bool(interpret))
+        out = fusedmm_bsr_pallas(a, x, y, h, edge_op=edge_op,
+                                 interpret=bool(interpret))
+    else:
+        out = _fusedmm_bsr_xla(a, x, y, h, edge_op=edge_op)
+    op_record("fusedmm", out, a.blocks, x, y, h, t0_ns=t0,
+              edge_op=edge_op, backend="pallas" if use_pallas else "xla")
+    return out
+
+
+def _fusedmm_bsr_xla(a: BSR, x, y, h, *, edge_op: str) -> jnp.ndarray:
     from repro.kernels.ref import fusedmm_softmax_ref, sddmm_bsr_ref
     if edge_op == "softmax":
         return fusedmm_softmax_ref(a, x, y, h)

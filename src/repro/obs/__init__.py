@@ -1,0 +1,60 @@
+"""repro.obs — unified observability: span tracing + metrics + export.
+
+One process-wide :class:`~repro.obs.tracer.Tracer` and one
+:class:`~repro.obs.metrics.MetricsRegistry` serve every layer of the
+stack — kernels/autotune dispatch, minibatch/full-batch training, the
+sampling loader's prefetch daemon thread, and the serving tier — so a
+profiled run produces a single timeline instead of four private stat
+piles. Everything is **disabled by default**: the hot-loop cost of a
+disabled ``obs.span(...)`` is one module-flag check returning a shared
+no-op context manager, measured in the test suite against an explicit
+per-call bound.
+
+Quickstart::
+
+    from repro import obs
+
+    with obs.profiled():                       # enable tracing + op records
+        train_gnn_minibatch(..., profile=True)
+    obs.write_chrome_trace("trace.json")       # chrome://tracing / Perfetto
+    print(obs.metrics().snapshot())
+
+    # or attribution without leaving the terminal:
+    #   PYTHONPATH=src python tools/trace_summary.py trace.json
+
+Layer conventions (span name prefixes):
+
+========  ====================================================
+prefix    layer
+========  ====================================================
+train.    trainer stages: sample / pack / h2d / step / ckpt / infer
+loader.   host pipeline (prefetch stalls — recorded from the
+          consumer side; producer-side sample/pack spans carry the
+          daemon thread's tid)
+op.       kernel dispatch records (profile-ops mode; plan names
+          ride in the ``plan`` attr)
+tuning.   autotuner decisions (instant events: candidates,
+          timings, winner)
+serve.    serving tier: queue_wait / sample / pack / gather /
+          apply per flush
+watchdog. StragglerWatchdog step events
+========  ====================================================
+"""
+from repro.obs.tracer import (Span, Tracer, disable, enable, enabled,
+                              get_tracer, instant, op_profiling_enabled,
+                              op_record, op_t0, profiled, reset, span)
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               metrics, metrics_to_jsonl)
+from repro.obs.export import (to_chrome_trace, validate_chrome_trace,
+                              write_chrome_trace)
+from repro.obs.device_counters import (DeviceCounters, device_counters)
+
+__all__ = [
+    "Span", "Tracer", "span", "instant", "op_record", "op_t0", "profiled",
+    "enable", "disable", "enabled", "reset", "get_tracer",
+    "op_profiling_enabled",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "metrics",
+    "metrics_to_jsonl",
+    "to_chrome_trace", "write_chrome_trace", "validate_chrome_trace",
+    "DeviceCounters", "device_counters",
+]

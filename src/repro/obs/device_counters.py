@@ -1,0 +1,74 @@
+"""Named on-device counter pytree — drained without per-step host syncs.
+
+Generalizes the ``init_step_stats`` pattern the fault-tolerant trainer
+introduced (PR 7): a jitted step wants to *count* things — skipped
+updates, capacity-overflow edges, cache hits — but a per-step host read
+of any counter forces a device sync that serializes the pipeline. The
+fix is to thread the counters through the step as a carry: the step
+returns the bumped pytree, the device accumulates asynchronously, and
+the host reads the values back only at epoch/checkpoint cadence
+(:meth:`DeviceCounters.drain` — the one deliberate sync point).
+
+:class:`DeviceCounters` stores all counters in one ``(n,)`` int32 array
+(one carry leaf however many counters ride along) with the names as
+static pytree metadata, so it crosses ``jit`` / ``shard_map`` /
+``device_put`` boundaries like any other carry. ``__getitem__`` keeps
+the dict-style reads of the original pattern working (traced scalar
+inside jit, concrete scalar outside).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["DeviceCounters", "device_counters"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceCounters:
+    """Immutable named-int32-counter pytree. Functional updates:
+    ``stats = stats.add("skipped", 1)`` inside the traced step."""
+
+    names: tuple
+    values: Any    # (len(names),) int32 array (concrete or traced)
+
+    def _idx(self, name: str) -> int:
+        try:
+            return self.names.index(name)
+        except ValueError:
+            raise KeyError(f"no counter {name!r}; have {self.names}") \
+                from None
+
+    def add(self, name: str, amount) -> "DeviceCounters":
+        """New pytree with ``amount`` (traced or concrete int) added to
+        ``name``. Usable inside jit — the update is an ``at[].add``."""
+        i = self._idx(name)
+        return dataclasses.replace(
+            self, values=self.values.at[i].add(
+                jnp.asarray(amount, jnp.int32)))
+
+    def __getitem__(self, name: str):
+        """The counter's scalar (traced inside jit, concrete outside) —
+        keeps ``int(stats["skipped"])`` working as before."""
+        return self.values[self._idx(name)]
+
+    def drain(self) -> dict:
+        """Host-side read of every counter — THE device sync. Call at
+        epoch/checkpoint cadence, never per step."""
+        host = jax.device_get(self.values)
+        return {n: int(v) for n, v in zip(self.names, host)}
+
+
+jax.tree_util.register_dataclass(DeviceCounters,
+                                 data_fields=["values"],
+                                 meta_fields=["names"])
+
+
+def device_counters(*names: str) -> DeviceCounters:
+    """Fresh zeroed counters: ``device_counters("skipped", "overflow")``."""
+    assert names and len(set(names)) == len(names), names
+    return DeviceCounters(names=tuple(names),
+                          values=jnp.zeros(len(names), jnp.int32))

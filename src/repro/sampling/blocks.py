@@ -242,13 +242,17 @@ class BlockPlanCache:
         so they get the measured best of what they can actually run
         instead of a plan that silently degrades. Restricted plans cache
         and persist under their own key."""
+        from repro import obs
+
         ck = (n_dst, n_src, nnz, k_hint, self.semiring, sell_ok)
         plan = self._plans.get(ck)
         if plan is not None:
             return plan
         skey = self.key(*ck[:5]) + ("" if sell_ok else "nosell")
+        source = None
         if self.db is not None:
             plan = self.db.get_key(skey)
+            source = "db" if plan is not None else None
         if plan is None:
             if self.tune and block.nnz:
                 rep = sp.COO(row=np.asarray(block.row, np.int64),
@@ -259,12 +263,17 @@ class BlockPlanCache:
                                 semiring_reduce=self.semiring,
                                 tile_candidates=(),
                                 sell_candidates=None if sell_ok else ())
+                source = "measure" if self.measure else "sweep"
             else:
                 plan = KernelPlan.trusted(k_hint)
+                source = "untuned"
             if self.db is not None:
                 self.db.put_key(skey, plan)
                 self.db.save()
         self._plans[ck] = plan
+        if obs.enabled():
+            obs.instant("tuning.plan", site="block_plan_cache", key=skey,
+                        source=source, kind=plan.kind)
         return plan
 
     def kinds(self) -> tuple:
@@ -299,16 +308,25 @@ def block_spmm(pb: PackedBlock, h: Array, reduce: str = "mean",
     in ``h`` by plain AD — per-batch blocks have no reusable transpose to
     cache, so the custom-VJP machinery of the full-graph path would buy
     nothing here."""
+    from repro.obs import op_record, op_t0
+
     sr = get_semiring(reduce, combine)
+    t0 = op_t0()
     if pb.plan_kind == "ell" and pb.ell is not None and sr.mxu_eligible:
         out = kops.ell_spmm(pb.ell, h)
     elif pb.plan_kind == "sell" and pb.sell is not None and sr.mxu_eligible:
         out = kops.sell_spmm(pb.sell, h)
     else:
-        return _trusted_reduce(pb, h, sr).astype(h.dtype)
+        out = _trusted_reduce(pb, h, sr).astype(h.dtype)
+        op_record("block_spmm", out, h, t0_ns=t0, plan="trusted",
+                  reduce=reduce)
+        return out
     if sr.reduce == "mean":
         out = out * (1.0 / jnp.maximum(pb.degrees, 1.0))[:, None]
-    return out.astype(h.dtype)
+    out = out.astype(h.dtype)
+    op_record("block_spmm", out, h, t0_ns=t0, plan=pb.plan_kind,
+              reduce=reduce)
+    return out
 
 
 def block_spmm_baseline(pb: PackedBlock, h: Array, reduce: str = "mean",

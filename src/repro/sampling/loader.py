@@ -35,6 +35,8 @@ from typing import Callable, Iterator, Optional
 
 import numpy as np
 
+from repro import obs
+
 __all__ = ["seed_batches", "shard_seeds", "num_seed_batches", "prefetch",
            "resilient_prefetch"]
 
@@ -161,7 +163,11 @@ def prefetch(it: Iterator, depth: int = 1) -> Iterator:
     t.start()
     try:
         while True:
-            exc, item = q.get()
+            # consumer-side stall: how long the device step waited for the
+            # host pipeline to produce the next batch (a long loader.stall
+            # span = the prefetch thread is the bottleneck, not the step)
+            with obs.span("loader.stall"):
+                exc, item = q.get()
             if exc is not None:
                 raise exc
             if item is _DONE:

@@ -167,6 +167,7 @@ class FeatureCache:
         ids = list(ids)[-take:]
         rows = rows[-take:]
         slots = []
+        n_evict = 0
         for nid in ids:
             stale = self._slot_of.pop(int(nid), None)
             if stale is not None:          # stale-stamp refill reuses its slot
@@ -176,6 +177,7 @@ class FeatureCache:
             else:                          # evict the least-recently-used
                 _, (slot, _) = self._slot_of.popitem(last=False)
                 self.stats.evictions += 1
+                n_evict += 1
                 slots.append(slot)
         self._table = table_insert(self._table,
                                    jnp.asarray(np.asarray(slots, np.int32)),
@@ -183,6 +185,11 @@ class FeatureCache:
         for nid, slot in zip(ids, slots):
             self._slot_of[int(nid)] = (slot, self.epoch)
         self.stats.insertions += len(ids)
+        from repro import obs
+        if obs.enabled():
+            reg = obs.metrics()
+            reg.counter("cache.evictions").inc(n_evict)
+            reg.counter("cache.insertions").inc(len(ids))
 
     def gather(self, ids) -> jnp.ndarray:
         """``(len(ids), K)`` device rows for global ``ids`` (host int
@@ -199,8 +206,16 @@ class FeatureCache:
         # sentinel lanes' zeros double as the pad fill
         staged = np.zeros((len(ids), self.k), np.float32)
         staged[miss] = self._fallback[ids[miss]]
-        self.stats.hits += int(np.count_nonzero(slots >= 0))
-        self.stats.misses += int(np.count_nonzero(miss))
+        n_hit = int(np.count_nonzero(slots >= 0))
+        n_miss = int(np.count_nonzero(miss))
+        self.stats.hits += n_hit
+        self.stats.misses += n_miss
+        from repro import obs
+        if obs.enabled():        # mirror into the shared metrics registry
+            reg = obs.metrics()
+            reg.counter("cache.hits").inc(n_hit)
+            reg.counter("cache.misses").inc(n_miss)
+            reg.gauge("cache.hit_rate").set(self.stats.hit_rate)
 
         # gather BEFORE inserting: this call's misses may LRU-evict this
         # call's own hits, and their slots must be read out first (the

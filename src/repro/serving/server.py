@@ -52,6 +52,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import sparse as sp
 from repro.core.patch import patched
 from repro.sampling import (BlockPlanCache, NeighborSampler, pack_block,
@@ -156,6 +157,7 @@ class GNNServer:
         self.flush_errors = 0
         self.served_requests = 0
         self.latencies_s: list[float] = []
+        self.queue_waits_s: list[float] = []
         self.flush_sizes: list[int] = []
         if start:
             self._thread = threading.Thread(target=self._loop, daemon=True,
@@ -257,16 +259,34 @@ class GNNServer:
         return blocks, self.fanouts, self.params
 
     def _execute(self, flush: Flush) -> None:
+        # queue wait = how long tickets coalesced in the batcher before
+        # this execution started (batcher clock is time.monotonic; the
+        # tracer's is perf_counter_ns, so the wait is recorded as a
+        # duration ending "now" rather than by converting timestamps)
+        t_exec = time.monotonic()
+        waits = [t_exec - t.submitted_at for t in flush.tickets]
+        if obs.enabled():
+            tracer = obs.get_tracer()
+            now_ns = time.perf_counter_ns()
+            for w in waits:
+                dur = int(w * 1e9)
+                tracer.add_span("serve.queue_wait", now_ns - dur, dur,
+                                flush=flush.index)
         try:
             if self.faults is not None:
                 self.faults.before_flush(flush.index)
-            with patched(self.use_isplib):
+            with patched(self.use_isplib), \
+                    obs.span("serve.flush", index=flush.index,
+                             n_real=flush.n_real,
+                             n_tickets=len(flush.tickets)):
                 out = self._run_model(flush)
         except BaseException as exc:            # noqa: BLE001 — to tickets
             now = time.monotonic()
             with self._lock:
                 self.flushes += 1
                 self.flush_errors += 1
+            if obs.enabled():
+                obs.metrics().counter("serve.flush_errors").inc()
             for t in flush.tickets:
                 t.fail(exc, now)
             return
@@ -275,39 +295,56 @@ class GNNServer:
             self.flushes += 1
             self.served_requests += len(flush.tickets)
             self.flush_sizes.append(flush.n_real)
+            self.queue_waits_s.extend(waits)
             for t, sl in zip(flush.tickets, flush.splits()):
                 t.flush_index = flush.index
                 self.latencies_s.append(now - t.submitted_at)
+        if obs.enabled():
+            reg = obs.metrics()
+            reg.counter("serve.requests").inc(len(flush.tickets))
+            reg.counter("serve.flushes").inc()
+            lat_h = reg.histogram("serve.latency_s")
+            for t in flush.tickets:
+                lat_h.observe(now - t.submitted_at)
+            wait_h = reg.histogram("serve.queue_wait_s")
+            for w in waits:
+                wait_h.observe(w)
         for t, sl in zip(flush.tickets, flush.splits()):
             t.fill(out[sl], now)
 
     def _run_model(self, flush: Flush) -> np.ndarray:
         """Sample, pack, gather, apply — one micro-batch end to end.
         Returns per-submitted-seed logit rows in ticket order."""
-        uniq, inverse = np.unique(flush.seeds, return_inverse=True)
-        blocks, fo, params = self._serve_blocks(uniq, flush.index)
-        buckets = plan_buckets(blocks, batch_size=flush.bucket,
-                               fanouts=fo, base=self.bucket_base)
-        # per-layer operand widths: the cache's row width feeds the
-        # outermost block; deeper blocks see the hidden dims
-        ks = [self.cache.k] + [self.dims[i] for i in range(1, len(blocks))]
-        pbs = []
-        for blk, bk, k in zip(blocks, buckets, ks):
-            plan = self.plan_cache.plan_for(blk, n_dst=bk.n_dst,
-                                            n_src=bk.n_src, nnz=bk.nnz,
-                                            k_hint=k)
-            pbs.append(pack_block(blk, n_dst=bk.n_dst, n_src=bk.n_src,
-                                  nnz=bk.nnz, plan=plan,
-                                  ell_width=bk.ell_width,
-                                  sell_steps=bk.sell_steps))
+        with obs.span("serve.sample", n_seeds=int(flush.seeds.size)):
+            uniq, inverse = np.unique(flush.seeds, return_inverse=True)
+            blocks, fo, params = self._serve_blocks(uniq, flush.index)
+        with obs.span("serve.pack"):
+            buckets = plan_buckets(blocks, batch_size=flush.bucket,
+                                   fanouts=fo, base=self.bucket_base)
+            # per-layer operand widths: the cache's row width feeds the
+            # outermost block; deeper blocks see the hidden dims
+            ks = [self.cache.k] + [self.dims[i]
+                                   for i in range(1, len(blocks))]
+            pbs = []
+            for blk, bk, k in zip(blocks, buckets, ks):
+                plan = self.plan_cache.plan_for(blk, n_dst=bk.n_dst,
+                                                n_src=bk.n_src, nnz=bk.nnz,
+                                                k_hint=k)
+                pbs.append(pack_block(blk, n_dst=bk.n_dst, n_src=bk.n_src,
+                                      nnz=bk.nnz, plan=plan,
+                                      ell_width=bk.ell_width,
+                                      sell_steps=bk.sell_steps))
         # the outermost block's padded source ids, host-side, with the
         # cache's padding sentinel (== num_rows -> zero row, matching
         # gather_rows' fill)
-        src = np.full(buckets[0].n_src, self.cache.num_rows, np.int64)
-        src[: blocks[0].n_src] = blocks[0].src_ids
-        h = self.cache.gather(src)
-        out = self._jit_apply(params, tuple(pbs), h)
-        return np.asarray(out)[: len(uniq)][inverse]
+        with obs.span("serve.gather", n_src=int(buckets[0].n_src)):
+            src = np.full(buckets[0].n_src, self.cache.num_rows, np.int64)
+            src[: blocks[0].n_src] = blocks[0].src_ids
+            h = self.cache.gather(src)
+        with obs.span("serve.apply"):
+            out = self._jit_apply(params, tuple(pbs), h)
+            out = np.asarray(out)    # device sync: the span ends honest
+        return out[: len(uniq)][inverse]
 
     # -- historical embeddings --------------------------------------------
     def _hidden_matrix(self) -> np.ndarray:
@@ -344,17 +381,24 @@ class GNNServer:
         return np.asarray(out)
 
     def latency_stats(self) -> dict:
-        """p50/p99/mean request latency + flush shape counters so far."""
+        """p50/p99/mean request latency, queue-wait percentiles, and flush
+        shape counters so far. Every key is always present — an idle
+        server reports 0.0, not a missing key (dashboards and the bench
+        table index these unconditionally)."""
         with self._lock:
             lat = np.asarray(self.latencies_s, np.float64)
+            waits = np.asarray(self.queue_waits_s, np.float64)
             sizes = list(self.flush_sizes)
             out = dict(requests=self.served_requests, flushes=self.flushes,
                        flush_errors=self.flush_errors,
                        cache_hit_rate=self.cache.stats.hit_rate)
-        if len(lat):
-            out.update(p50_ms=float(np.percentile(lat, 50) * 1e3),
-                       p99_ms=float(np.percentile(lat, 99) * 1e3),
-                       mean_ms=float(lat.mean() * 1e3))
-        if sizes:
-            out["mean_flush_size"] = float(np.mean(sizes))
+        out.update(
+            p50_ms=float(np.percentile(lat, 50) * 1e3) if len(lat) else 0.0,
+            p99_ms=float(np.percentile(lat, 99) * 1e3) if len(lat) else 0.0,
+            mean_ms=float(lat.mean() * 1e3) if len(lat) else 0.0,
+            queue_wait_p50_ms=(float(np.percentile(waits, 50) * 1e3)
+                               if len(waits) else 0.0),
+            queue_wait_p99_ms=(float(np.percentile(waits, 99) * 1e3)
+                               if len(waits) else 0.0),
+            mean_flush_size=float(np.mean(sizes)) if sizes else 0.0)
         return out

@@ -68,9 +68,42 @@ class StragglerWatchdog:
         self.events.append(ev)
         self.total_steps += 1
         self.straggler_count += int(flagged)
+        self._trace(ev)
         if flagged and self.on_straggler:
             self.on_straggler(ev)
         return ev
+
+    @staticmethod
+    def _trace(ev: StepEvent) -> None:
+        """Mirror the event onto the obs timeline (no-op when tracing is
+        off): the observed window becomes a ``watchdog.step`` span ending
+        "now" — reconstructed, since the watchdog receives a duration, not
+        timestamps — so straggler steps show up as visibly long bars next
+        to the trainer's own ``train.step`` track."""
+        from repro import obs
+        tracer = obs.get_tracer()
+        if not tracer.enabled:
+            return
+        dur_ns = int(ev.wall_s * 1e9)
+        tracer.add_span("watchdog.step", time.perf_counter_ns() - dur_ns,
+                        dur_ns, step=ev.step, ema_s=ev.ema_s,
+                        straggler=ev.straggler)
+
+    def summary(self) -> dict:
+        """Lifetime aggregates + the worst recent windows, for run reports
+        and the trace exporter's ``otherData``: total observed steps,
+        straggler count/fraction, current EMA, and the ``worst`` (up to 5)
+        slowest events still in the bounded window, slowest first."""
+        worst = sorted(self.events, key=lambda e: e.wall_s, reverse=True)[:5]
+        return {
+            "total_steps": self.total_steps,
+            "straggler_count": self.straggler_count,
+            "straggler_frac": (self.straggler_count / self.total_steps
+                               if self.total_steps else 0.0),
+            "ema_s": self.ema if self.ema is not None else 0.0,
+            "consecutive": self.consecutive,
+            "worst": [dataclasses.asdict(e) for e in worst],
+        }
 
     @property
     def should_escalate(self) -> bool:

@@ -13,6 +13,7 @@ the closure), so toggling retraces instead of reusing stale bindings.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import Any
@@ -20,6 +21,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.patch import patched
 from repro.models.gnn import build_bundle, make_gnn
 from repro.optim import adamw, apply_updates
@@ -60,19 +62,32 @@ def train_gnn(arch: str, dataset, *, hidden: int = 128, epochs: int = 30,
               lr: float = 1e-2, weight_decay: float = 5e-4,
               use_isplib: bool = True, tune: bool = True,
               measure_tuning: bool = False, seed: int = 0,
-              bundle=None, tuning_db=None) -> GNNTrainResult:
+              bundle=None, tuning_db=None,
+              profile: bool = False) -> GNNTrainResult:
     """Train a 2-layer GNN on ``dataset`` (a data.graphs.GraphDataset).
     ``tuning_db`` (a repro.core.TuningDB) skips re-measuring plans this
-    machine has already tuned for this graph structure."""
-    with patched(use_isplib):
+    machine has already tuned for this graph structure.
+
+    ``profile=True`` enables the ``repro.obs`` tracer for the run (if not
+    already on) and records ``train.build`` / ``train.step`` /
+    ``train.eval`` spans with per-step device sync — attribution mode,
+    not benchmarking (the sync serializes the epoch loop the timed
+    ``epoch_time_s`` otherwise overlaps)."""
+    with contextlib.ExitStack() as _ctx:
+        if profile and not obs.enabled():
+            _ctx.enter_context(obs.profiled(ops=True, fresh=False))
+        _ctx.enter_context(patched(use_isplib))
         if bundle is None:
-            bundle = build_bundle(dataset, k_hint=hidden, tune=tune,
-                                  measure=measure_tuning, db=tuning_db)
-        init, apply = make_gnn(arch, dataset.num_features, hidden,
-                               dataset.num_classes)
-        params = init(jax.random.PRNGKey(seed))
-        opt = adamw(lr, weight_decay=weight_decay)
-        opt_state = opt.init(params)
+            with obs.span("train.build"):
+                bundle = build_bundle(dataset, k_hint=hidden, tune=tune,
+                                      measure=measure_tuning, db=tuning_db)
+        with obs.span("train.init"):
+            init, apply = make_gnn(arch, dataset.num_features, hidden,
+                                   dataset.num_classes)
+            params = init(jax.random.PRNGKey(seed))
+            opt = adamw(lr, weight_decay=weight_decay)
+            opt_state = opt.init(params)
+            jax.block_until_ready(jax.tree_util.tree_leaves(params)[0])
 
         def loss_fn(p, x, y, mask):
             logits = apply(p, bundle, x)
@@ -92,20 +107,25 @@ def train_gnn(arch: str, dataset, *, hidden: int = 128, epochs: int = 30,
         tm = dataset.train_mask
 
         t0 = time.perf_counter()
-        params, opt_state, loss = step(params, opt_state, x, y, tm)
-        jax.block_until_ready(loss)
+        with obs.span("train.step", step=0, compile=True):
+            params, opt_state, loss = step(params, opt_state, x, y, tm)
+            jax.block_until_ready(loss)
         compile_time = time.perf_counter() - t0
 
         losses = [float(loss)]
         t0 = time.perf_counter()
-        for _ in range(max(epochs - 1, 1)):
-            params, opt_state, loss = step(params, opt_state, x, y, tm)
+        for ep in range(max(epochs - 1, 1)):
+            with obs.span("train.step", step=ep + 1):
+                params, opt_state, loss = step(params, opt_state, x, y, tm)
+                if profile:         # span times execution, not dispatch
+                    jax.block_until_ready(loss)
             losses.append(float(loss))
         jax.block_until_ready(loss)
         epoch_time = (time.perf_counter() - t0) / max(epochs - 1, 1)
 
-        train_acc = float(evaluate(params, x, y, tm))
-        test_acc = float(evaluate(params, x, y, dataset.test_mask))
+        with obs.span("train.eval"):
+            train_acc = float(evaluate(params, x, y, tm))
+            test_acc = float(evaluate(params, x, y, dataset.test_mask))
 
     return GNNTrainResult(
         arch=arch, dataset=dataset.name, use_isplib=use_isplib,

@@ -65,6 +65,7 @@ epoch end. ``repro.testing.faults`` injects each failure mode for the
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 import warnings
@@ -75,6 +76,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import sparse as sp
 from repro.core.autotune import TuningDB
 from repro.core.patch import patched
@@ -180,13 +182,19 @@ def make_block_model(arch: str, in_dim: int, hidden: int, out_dim: int,
     return init, conv, apply_blocks, dims
 
 
-def init_step_stats() -> dict:
+def init_step_stats() -> obs.DeviceCounters:
     """Device-resident fault counters the step threads through itself:
     ``skipped`` (updates vetoed by the non-finite guard) and ``overflow``
     (device-sampler capacity-dropped edges). Carried as a jit argument so
     counting costs no per-step host sync — the trainer reads them back
-    once per epoch / checkpoint."""
-    return {"skipped": jnp.int32(0), "overflow": jnp.int32(0)}
+    once per epoch / checkpoint.
+
+    Backed by :class:`repro.obs.DeviceCounters` (the generalized form of
+    this pattern): dict-style reads (``int(stats["skipped"])``) keep
+    working, updates inside the traced step are functional
+    (``stats.add("skipped", 1)``), and ``stats.drain()`` is the one
+    deliberate host sync."""
+    return obs.device_counters("skipped", "overflow")
 
 
 def _step_tail(opt, p, s, loss, grads, stats, ovf, *, num_shards: int,
@@ -231,14 +239,13 @@ def _step_tail(opt, p, s, loss, grads, stats, ovf, *, num_shards: int,
         loss = jax.lax.pmean(loss, "data")
     updates, s_new = opt.update(grads, s, p)
     p_new = apply_updates(p, updates)
-    skipped = stats["skipped"]
     if skip_nonfinite:
         p_new = jax.tree_util.tree_map(
             lambda a, b: jnp.where(ok, a, b), p_new, p)
         s_new = jax.tree_util.tree_map(
             lambda a, b: jnp.where(ok, a, b), s_new, s)
-        skipped = skipped + jnp.where(ok, 0, 1).astype(jnp.int32)
-    stats = {"skipped": skipped, "overflow": stats["overflow"] + ovf}
+        stats = stats.add("skipped", jnp.where(ok, 0, 1))
+    stats = stats.add("overflow", ovf)
     return p_new, s_new, loss, grads, stats
 
 
@@ -468,7 +475,8 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
                         resume: bool = True,
                         faults=None, prefetch_restarts: int = 2,
                         device_caps=None, max_escalations: int = 2,
-                        watchdog=None) -> MinibatchTrainResult:
+                        watchdog=None,
+                        profile: bool = False) -> MinibatchTrainResult:
     """Neighbor-sampled minibatch training on ``dataset`` (a
     ``data.graphs.GraphDataset``), one layer per fanout entry.
 
@@ -525,7 +533,20 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
     * ``faults`` (a ``repro.testing.FaultPlan``) injects failures at the
       production injection points; ``watchdog`` (a
       ``train.fault_tolerance.StragglerWatchdog``) observes per-step
-      wall-clock (forces a per-step device sync — benchmarking off)."""
+      wall-clock (forces a per-step device sync — benchmarking off).
+
+    ``profile=True`` turns the run into a profiled session: the
+    ``repro.obs`` tracer is enabled for the duration (with op records) if
+    it isn't already, the per-stage spans — ``loader.sample`` /
+    ``loader.pack`` / ``loader.h2d`` on the prefetch thread,
+    ``train.step`` / ``train.epoch`` / ``train.ckpt`` / ``train.infer``
+    on the main thread — carry real durations, and every step is
+    ``block_until_ready``-synced so ``train.step`` measures device
+    execution rather than dispatch (profile-mode semantics: this sync
+    defeats the async pipeline, so profiled epoch times are for
+    attribution, not benchmarking). Export afterwards with
+    ``obs.write_chrome_trace(path)``. Default off: the spans compile down
+    to one flag check each."""
     from repro.dist.mesh import (axis_shard_count, leading_axis_sharding,
                                  replicated_sharding)
 
@@ -541,7 +562,11 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
                              f"under sum); arch {arch!r} needs {semiring}")
         if any(f is None for f in fanouts):
             raise ValueError("sampler='device' needs finite fanouts")
-    with patched(use_isplib):
+    with contextlib.ExitStack() as _ctx:
+        if profile and not obs.enabled():
+            # spans stay in the tracer after return, ready for export
+            _ctx.enter_context(obs.profiled(ops=True, fresh=False))
+        _ctx.enter_context(patched(use_isplib))
         csr = sp.csr_from_coo(dataset.coo)
         host_sampler = NeighborSampler(csr, fanouts, seed=seed)
         init, conv, apply_blocks, dims = make_block_model(
@@ -697,13 +722,15 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
                 # epoch loop appends this epoch's loss — include it so the
                 # restored history matches the resumed epoch count
                 ep_losses.append(float(last))
-            extra = {"losses": ep_losses,
-                     "src_caps": src_caps,
-                     "skipped": skipped_base + int(stats["skipped"]),
-                     "overflow": overflow_base + int(stats["overflow"]),
-                     "escalations": escalations}
-            ckpt.save(nsteps, {"params": params, "opt_state": opt_state},
-                      blocking=blocking, extra=extra)
+            with obs.span("train.ckpt", step=nsteps):
+                drained = stats.drain()   # the deliberate ckpt-cadence sync
+                extra = {"losses": ep_losses,
+                         "src_caps": src_caps,
+                         "skipped": skipped_base + drained["skipped"],
+                         "overflow": overflow_base + drained["overflow"],
+                         "escalations": escalations}
+                ckpt.save(nsteps, {"params": params, "opt_state": opt_state},
+                          blocking=blocking, extra=extra)
             ckpt_saves += 1
 
         def maybe_ckpt(gstep: int, last) -> None:
@@ -748,22 +775,26 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
             for bi, group in seed_groups(epoch):
                 if bi < start:
                     continue
-                shard_blocks = [
-                    host_sampler.sample(seed_ids[:n_real],
-                                   round=(epoch * 100003 + bi) * num_shards
-                                   + si)
-                    for si, (seed_ids, n_real) in enumerate(group)]
-                buckets = merge_buckets(
-                    [plan_buckets(blocks, batch_size=batch_size,
-                                  fanouts=fanouts, base=bucket_base)
-                     for blocks in shard_blocks])
-                shard_pbs = [pack_shard(blocks, buckets)
-                             for blocks in shard_blocks]
+                with obs.span("loader.sample", batch=bi):
+                    shard_blocks = [
+                        host_sampler.sample(seed_ids[:n_real],
+                                       round=(epoch * 100003 + bi)
+                                       * num_shards + si)
+                        for si, (seed_ids, n_real) in enumerate(group)]
+                with obs.span("loader.pack", batch=bi):
+                    buckets = merge_buckets(
+                        [plan_buckets(blocks, batch_size=batch_size,
+                                      fanouts=fanouts, base=bucket_base)
+                         for blocks in shard_blocks])
+                    shard_pbs = [pack_shard(blocks, buckets)
+                                 for blocks in shard_blocks]
                 if num_shards == 1:
                     sig = tuple(pb.bucket_signature for pb in shard_pbs[0])
                     (seed_ids, n_real), = group
-                    yield (tuple(shard_pbs[0]), jnp.asarray(seed_ids),
-                           jnp.asarray(n_real), sig)
+                    with obs.span("loader.h2d", batch=bi):
+                        item = (tuple(shard_pbs[0]), jnp.asarray(seed_ids),
+                                jnp.asarray(n_real), sig)
+                    yield item
                 else:
                     # unify SELL step counts across shards BEFORE reading
                     # the signature — the padded count is part of the
@@ -778,12 +809,13 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
                         layers.append(per)
                     sig = tuple(per[0].bucket_signature for per in layers)
                     pbs = tuple(stack_blocks(per) for per in layers)
-                    pbs = jax.device_put(pbs, stacked)
-                    sids = jax.device_put(
-                        jnp.asarray(np.stack([g[0] for g in group])),
-                        stacked)
-                    nrs = jax.device_put(
-                        jnp.asarray([g[1] for g in group]), stacked)
+                    with obs.span("loader.h2d", batch=bi):
+                        pbs = jax.device_put(pbs, stacked)
+                        sids = jax.device_put(
+                            jnp.asarray(np.stack([g[0] for g in group])),
+                            stacked)
+                        nrs = jax.device_put(
+                            jnp.asarray([g[1] for g in group]), stacked)
                     yield pbs, sids, nrs, sig
 
         # the watchdog starts observing after the first executed epoch:
@@ -829,9 +861,14 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
                 gstep = epoch * steps_per_epoch + bi
                 t0 = before_step(gstep)
                 signatures.add(sig)
-                params, opt_state, last, _, stats = step(
-                    params, opt_state, pbs, sids, nrs, x, y,
-                    jnp.int32(gstep), stats)
+                with obs.span("train.step", step=gstep,
+                              grad_sync=grad_sync if num_shards > 1
+                              else None):
+                    params, opt_state, last, _, stats = step(
+                        params, opt_state, pbs, sids, nrs, x, y,
+                        jnp.int32(gstep), stats)
+                    if profile:   # profile-mode semantics: the span times
+                        jax.block_until_ready(last)   # execution, not dispatch
                 after_step(gstep, t0, last)
                 bi += 1
             return last
@@ -860,9 +897,14 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
                 gstep = epoch * steps_per_epoch + bi
                 t0 = before_step(gstep)
                 signatures.add(dev.signature)
-                params, opt_state, last, _, stats = step(
-                    params, opt_state, sids, nrs, rnd, x, y,
-                    jnp.int32(gstep), stats)
+                with obs.span("train.step", step=gstep, sampler="device",
+                              grad_sync=grad_sync if num_shards > 1
+                              else None):
+                    params, opt_state, last, _, stats = step(
+                        params, opt_state, sids, nrs, rnd, x, y,
+                        jnp.int32(gstep), stats)
+                    if profile:
+                        jax.block_until_ready(last)
                 after_step(gstep, t0, last)
             return last
 
@@ -878,8 +920,10 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
         try:
             for ep in range(start_epoch, epochs):
                 t0 = time.perf_counter()
-                loss = epoch_fn(ep, start_batch if ep == start_epoch else 0)
-                jax.block_until_ready(loss)
+                with obs.span("train.epoch", epoch=ep):
+                    loss = epoch_fn(ep,
+                                    start_batch if ep == start_epoch else 0)
+                    jax.block_until_ready(loss)
                 dt = time.perf_counter() - t0
                 if executed == 0:   # first executed epoch compiles buckets
                     compile_time = dt
@@ -957,11 +1001,12 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
         sample_time = measure_sample_stage()
 
         t0 = time.perf_counter()
-        logits = layerwise_inference(params, host_sampler, x, arch=arch,
-                                     dims=dims, plan_cache=plan_cache,
-                                     batch_size=infer_batch,
-                                     bucket_base=bucket_base)
-        jax.block_until_ready(logits)
+        with obs.span("train.infer"):
+            logits = layerwise_inference(params, host_sampler, x, arch=arch,
+                                         dims=dims, plan_cache=plan_cache,
+                                         batch_size=infer_batch,
+                                         bucket_base=bucket_base)
+            jax.block_until_ready(logits)
         infer_time = time.perf_counter() - t0
 
         train_acc = float(_acc(logits, y, dataset.train_mask))
@@ -972,6 +1017,13 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
             sync_bytes = wire_bytes(params, grad_sync)
         else:
             sync_bytes = 0
+
+        # drain the device counters once (THE host sync) and mirror them
+        # into the metrics registry for the JSONL sink / trace otherData
+        drained = stats.drain()
+        obs.metrics().counter("train.skipped_steps").inc(drained["skipped"])
+        obs.metrics().counter("train.overflow_edges").inc(
+            drained["overflow"])
 
     return MinibatchTrainResult(
         arch=arch, dataset=dataset.name, use_isplib=use_isplib,
@@ -984,8 +1036,8 @@ def train_gnn_minibatch(arch: str, dataset, *, fanouts=(10, 10),
         num_shards=num_shards, grad_sync=grad_sync,
         sync_bytes_per_step=sync_bytes, sampler=sampler,
         sample_time_s=sample_time,
-        skipped_steps=skipped_base + int(stats["skipped"]),
-        overflow_edges=overflow_base + int(stats["overflow"]),
+        skipped_steps=skipped_base + drained["skipped"],
+        overflow_edges=overflow_base + drained["overflow"],
         capacity_escalations=escalations,
         prefetch_restarts=n_prefetch_restarts,
         resumed_step=resumed_step, ckpt_saves=ckpt_saves,

@@ -1,0 +1,498 @@
+"""Observability layer (`repro.obs`): tracer/metrics semantics under
+concurrency, Chrome-trace export schema, disabled-mode overhead, and the
+profiled end-to-end paths the acceptance criteria pin down — a profiled
+training session and a profiled serving session must each produce a
+loadable trace whose spans cover >= 90% of the measured window, with
+per-stage and per-op attribution (plan names included).
+
+``test_profiled_smoke`` is the CI smoke entry point: one trace holding
+train + sampler + serving spans, schema-validated.
+"""
+import json
+import os
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.obs.export import to_chrome_trace, validate_chrome_trace, \
+    write_chrome_trace
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "tools"))
+import trace_summary  # noqa: E402
+
+
+@pytest.fixture(autouse=True)
+def _clean_obs():
+    """The tracer and registry are process singletons — every test starts
+    and leaves them disabled and empty."""
+    obs.disable()
+    obs.reset()
+    obs.metrics().reset()
+    yield
+    obs.disable()
+    obs.reset()
+    obs.metrics().reset()
+
+
+def _spans():
+    return obs.get_tracer().snapshot()
+
+
+def _names():
+    return [s.name for s in _spans()]
+
+
+# --------------------------------------------------------------------------
+# Tracer semantics
+# --------------------------------------------------------------------------
+
+def test_span_nesting_depth_and_category():
+    obs.enable()
+    with obs.span("train.epoch", epoch=0):
+        with obs.span("train.step", step=3):
+            time.sleep(0.001)
+    spans = _spans()
+    # children finish (and record) before parents
+    assert [s.name for s in spans] == ["train.step", "train.epoch"]
+    step, epoch = spans
+    assert (step.depth, epoch.depth) == (1, 0)
+    assert step.attrs == {"step": 3}
+    assert step.category == "train" and epoch.category == "train"
+    assert step.dur_ns > 0
+    # the child's interval nests inside the parent's
+    assert epoch.t_start_ns <= step.t_start_ns
+    assert step.t_end_ns <= epoch.t_end_ns
+
+
+def test_instant_and_add_span():
+    obs.enable()
+    obs.instant("tuning.sweep", winner="ell")
+    t1 = time.perf_counter_ns()
+    obs.get_tracer().add_span("watchdog.step", t1 - 5_000_000, 5_000_000,
+                              step=7)
+    inst, ext = _spans()
+    assert inst.dur_ns == 0 and inst.attrs == {"winner": "ell"}
+    assert ext.dur_ns == 5_000_000 and ext.attrs == {"step": 7}
+
+
+def test_disabled_span_is_shared_noop_and_records_nothing():
+    assert not obs.enabled()
+    a, b = obs.span("train.step"), obs.span("op.spmm")
+    assert a is b                      # the shared no-op singleton
+    with a:
+        pass
+    obs.instant("x")
+    assert _spans() == []
+
+
+def test_disabled_overhead_bound():
+    # the hot loop calls span() unconditionally; disabled cost must stay
+    # within a generous absolute bound (the real cost is ~100ns — the
+    # bound only guards against accidentally re-introducing allocation
+    # or locking on the disabled path)
+    assert not obs.enabled()
+    n = 50_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with obs.span("train.step"):
+            pass
+    per_call = (time.perf_counter() - t0) / n
+    assert per_call < 10e-6, f"disabled span() costs {per_call * 1e9:.0f}ns"
+
+
+def test_concurrent_recording_threads():
+    obs.enable()
+    n_threads, n_spans = 8, 200
+    barrier = threading.Barrier(n_threads)
+
+    def work(k):
+        barrier.wait()
+        for i in range(n_spans):
+            with obs.span(f"worker.{k}", i=i):
+                with obs.span(f"worker.{k}.inner"):
+                    pass
+            obs.metrics().counter("obs.test.total").inc()
+
+    ts = [threading.Thread(target=work, args=(k,)) for k in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    spans = _spans()
+    assert len(spans) == n_threads * n_spans * 2
+    assert obs.get_tracer().n_dropped == 0
+    # nesting state is per-thread: inner spans at depth 1, outers at 0
+    for s in spans:
+        assert s.depth == (1 if s.name.endswith(".inner") else 0), s
+    assert obs.metrics().counter("obs.test.total").value \
+        == n_threads * n_spans
+
+
+def test_max_spans_bound_drops_and_counts():
+    tr = obs.Tracer(max_spans=5)
+    tr.enabled = True
+    for i in range(9):
+        with tr.span("x", i=i):
+            pass
+    assert len(tr.snapshot()) == 5
+    assert tr.n_dropped == 4
+
+
+def test_profiled_restores_state_and_reset_is_fresh():
+    assert not obs.enabled()
+    with obs.profiled():
+        assert obs.enabled()
+        with obs.span("a.b"):
+            pass
+        assert len(_spans()) == 1
+    assert not obs.enabled()
+    assert len(_spans()) == 1          # spans survive for export
+    obs.reset()
+    assert _spans() == []
+
+
+def test_ops_toggle_bumps_patch_version():
+    from repro.core.patch import patch_version
+    v0 = patch_version()
+    obs.enable(ops=True)
+    v1 = patch_version()
+    obs.disable()
+    v2 = patch_version()
+    assert v1 != v0 and v2 != v1       # jitted callers retrace both ways
+
+
+# --------------------------------------------------------------------------
+# Metrics registry
+# --------------------------------------------------------------------------
+
+def test_metrics_instruments_and_snapshot():
+    reg = obs.MetricsRegistry()
+    reg.counter("c").inc()
+    reg.counter("c").inc(2.5)
+    reg.gauge("g").set(0.75)
+    h = reg.histogram("h")
+    for v in (1.0, 2.0, 3.0):
+        h.observe(v)
+    snap = reg.snapshot()
+    assert snap["c"] == 3.5
+    assert snap["g"] == 0.75
+    assert snap["h"]["count"] == 3 and snap["h"]["sum"] == 6.0
+    assert snap["h"]["p50"] == 2.0 and snap["h"]["max"] == 3.0
+
+
+def test_histogram_empty_summary_has_zero_defaults():
+    h = obs.Histogram("empty")
+    s = h.summary()
+    assert s == dict(count=0, sum=0.0, mean=0.0, p50=0.0, p99=0.0, max=0.0)
+
+
+def test_metric_name_kind_conflict_raises():
+    reg = obs.MetricsRegistry()
+    reg.counter("x")
+    with pytest.raises(TypeError):
+        reg.gauge("x")
+
+
+def test_histogram_reservoir_is_bounded_and_recent():
+    h = obs.Histogram("lat", max_samples=16)
+    for v in range(100):
+        h.observe(float(v))
+    assert h.count == 100
+    # percentiles come from the most recent window only
+    assert h.percentile(0) >= 84.0
+
+
+def test_metrics_jsonl_sink(tmp_path):
+    reg = obs.MetricsRegistry()
+    reg.counter("reqs").inc(4)
+    path = str(tmp_path / "metrics.jsonl")
+    obs.metrics_to_jsonl(path, reg, run="a")
+    reg.counter("reqs").inc()
+    obs.metrics_to_jsonl(path, reg, run="b")
+    lines = [json.loads(x) for x in open(path)]
+    assert [r["metrics"]["reqs"] for r in lines] == [4, 5]
+    assert [r["run"] for r in lines] == ["a", "b"]
+    assert all("ts" in r for r in lines)
+
+
+def test_device_counters_pytree():
+    import jax
+    import jax.numpy as jnp
+    stats = obs.device_counters("skipped", "overflow")
+
+    @jax.jit
+    def step(s, flag):
+        s = s.add("skipped", jnp.where(flag, 1, 0))
+        return s.add("overflow", 3)
+
+    for flag in (True, False, True):
+        stats = step(stats, flag)
+    assert stats.drain() == {"skipped": 2, "overflow": 9}
+    assert int(stats["overflow"]) == 9
+
+
+# --------------------------------------------------------------------------
+# Chrome-trace export
+# --------------------------------------------------------------------------
+
+def test_chrome_trace_schema_and_content(tmp_path):
+    obs.enable()
+    obs.metrics().counter("serve.requests").inc(2)
+    with obs.span("train.step", step=0, plan="bsr16x16"):
+        obs.instant("tuning.sweep", winner="ell",
+                    candidates=[["ell", 0.1], ["bsr16x16", 0.2]])
+
+    def worker():
+        with obs.span("loader.pack", batch=1):
+            pass
+
+    t = threading.Thread(target=worker, name="repro-prefetch")
+    t.start()
+    t.join()
+
+    obj = to_chrome_trace()
+    assert validate_chrome_trace(obj) == []
+    events = obj["traceEvents"]
+    x = [e for e in events if e["ph"] == "X"]
+    i = [e for e in events if e["ph"] == "i"]
+    m = [e for e in events if e["ph"] == "M"]
+    assert {e["name"] for e in x} == {"train.step", "loader.pack"}
+    assert [e["name"] for e in i] == ["tuning.sweep"]
+    # attrs ride in args; plan names survive export
+    (step,) = [e for e in x if e["name"] == "train.step"]
+    assert step["args"]["plan"] == "bsr16x16"
+    assert i[0]["args"]["winner"] == "ell"
+    # per-thread name metadata: main + the prefetch worker
+    tnames = {e["args"]["name"] for e in m if e["name"] == "thread_name"}
+    assert "repro-prefetch" in tnames
+    # two recording threads -> two distinct tids on the events
+    assert len({e["tid"] for e in x}) == 2
+    assert obj["otherData"]["metrics"]["serve.requests"] == 2
+    assert obj["otherData"]["n_dropped"] == 0
+
+    path = write_chrome_trace(str(tmp_path / "t.json"))
+    assert validate_chrome_trace(json.load(open(path))) == []
+
+
+def test_validate_chrome_trace_flags_violations():
+    assert validate_chrome_trace([]) != []
+    assert validate_chrome_trace({}) != []
+    bad = {"traceEvents": [
+        {"ph": "X", "name": "a", "pid": 1, "tid": 1, "ts": 0.0},  # no dur
+        {"ph": "q", "name": "b"},                                 # bad ph
+        {"ph": "i", "name": "", "pid": 1, "tid": 1, "ts": 0.0},   # empty name
+    ]}
+    errs = validate_chrome_trace(bad)
+    assert len(errs) >= 3
+    assert any("missing 'dur'" in e for e in errs)
+    assert any("unknown ph" in e for e in errs)
+    assert any("non-empty string" in e for e in errs)
+
+
+def test_trace_summary_tool(tmp_path, capsys):
+    obs.enable()
+    with obs.span("train.epoch"):
+        for i in range(3):
+            with obs.span("train.step", step=i):
+                time.sleep(0.001)
+    obs.instant("op.spmm.trace", shapes=[[8, 8]])
+    obs.instant("tuning.plan", site="build_cached_graph", source="db",
+                kind="ell")
+    obs.metrics().counter("cache.hits").inc(5)
+    path = write_chrome_trace(str(tmp_path / "t.json"))
+
+    s = trace_summary.summarize(trace_summary.load_trace(path))
+    names = {r["name"] for r in s["rows"]}
+    assert names == {"train.epoch", "train.step"}
+    assert s["coverage"] > 0.9         # epoch span covers the window
+    assert [c["category"] for c in s["categories"]] == ["train"]
+    # union within category: nested steps don't double the layer's share
+    # (float tolerance: union == wall can round a hair past 100)
+    assert s["categories"][0]["pct_wall"] <= 100.0 + 1e-6
+    assert s["op_counts"] == {"op.spmm.trace": 1}
+    assert s["tuning"][0]["kind"] == "ell"
+    assert s["metrics"]["cache.hits"] == 5
+
+    trace_summary.main([path, "--top", "5"])
+    out = capsys.readouterr().out
+    assert "train.step" in out and "tuning.plan" in out \
+        and "cache.hits" in out
+
+
+def test_interval_union_merges_overlaps():
+    evs = [{"ts": 0.0, "dur": 10.0}, {"ts": 5.0, "dur": 10.0},
+           {"ts": 30.0, "dur": 5.0}]
+    assert trace_summary.interval_union_us(evs) == 20.0
+
+
+# --------------------------------------------------------------------------
+# Watchdog + tuning integration
+# --------------------------------------------------------------------------
+
+def test_watchdog_summary_and_trace_spans():
+    from repro.train.fault_tolerance import StragglerWatchdog
+    wd = StragglerWatchdog(threshold=2.0)
+    obs.enable()
+    for step, wall in enumerate([0.1, 0.1, 0.5, 0.1]):
+        wd.observe(step, wall)
+    s = wd.summary()
+    assert s["total_steps"] == 4 and s["straggler_count"] == 1
+    assert s["straggler_frac"] == 0.25
+    assert s["worst"][0]["wall_s"] == 0.5 and s["worst"][0]["straggler"]
+    spans = [x for x in _spans() if x.name == "watchdog.step"]
+    assert len(spans) == 4
+    flagged = [x for x in spans if x.attrs["straggler"]]
+    assert len(flagged) == 1 and flagged[0].attrs["step"] == 2
+    # reconstructed duration matches the observed wall time
+    assert flagged[0].dur_ns == int(0.5 * 1e9)
+
+
+def test_watchdog_summary_empty():
+    from repro.train.fault_tolerance import StragglerWatchdog
+    s = StragglerWatchdog().summary()
+    assert s["total_steps"] == 0 and s["straggler_frac"] == 0.0
+    assert s["ema_s"] == 0.0 and s["worst"] == []
+
+
+def test_tuning_decisions_recorded(rng, tmp_path):
+    from repro.core.autotune import autotune
+    from tests.conftest import random_coo
+    coo, _ = random_coo(rng, 128, 128, 2000)
+    obs.enable()
+    autotune(coo, k_hint=64)
+    sweeps = [s for s in _spans() if s.name == "tuning.sweep"]
+    assert len(sweeps) == 1
+    sw = sweeps[0].attrs
+    assert "winner" in sw and sw["candidates"], sw
+    assert all(len(c) == 2 for c in sw["candidates"])
+    assert obs.metrics().counter("tuning.sweeps").value == 1
+    # counters stay live with tracing off; the timeline stays silent
+    obs.disable()
+    autotune(coo, k_hint=64)
+    assert obs.metrics().counter("tuning.sweeps").value == 2
+    assert len([s for s in _spans() if s.name == "tuning.sweep"]) == 1
+
+
+# --------------------------------------------------------------------------
+# Profiled end-to-end paths (the acceptance criteria)
+# --------------------------------------------------------------------------
+
+def test_profiled_fullgraph_train_coverage(tiny_dataset):
+    from repro.train.gnn import train_gnn
+    with obs.profiled(ops=True):
+        train_gnn("gcn", tiny_dataset, hidden=16, epochs=3, profile=True,
+                  tune=True)
+    obj = to_chrome_trace()
+    assert validate_chrome_trace(obj) == []
+    s = trace_summary.summarize(obj)
+    assert s["coverage"] >= 0.9, s["coverage"]
+    names = {r["name"] for r in s["rows"]}
+    assert {"train.build", "train.init", "train.step",
+            "train.eval"} <= names
+    # plan attribution: the tuner's decisions are on the timeline
+    assert any(t["name"] == "tuning.plan" for t in s["tuning"])
+
+
+def test_profiled_minibatch_train_stage_breakdown(tiny_dataset):
+    from repro.train.gnn_minibatch import train_gnn_minibatch
+    with obs.profiled(ops=True):
+        res = train_gnn_minibatch("sage-sum", tiny_dataset, fanouts=(5, 5),
+                                  batch_size=64, hidden=16, epochs=1,
+                                  tune=False, profile=True)
+    obj = to_chrome_trace()
+    assert validate_chrome_trace(obj) == []
+    s = trace_summary.summarize(obj)
+    assert s["coverage"] >= 0.9, s["coverage"]
+    names = {r["name"] for r in s["rows"]}
+    assert {"loader.sample", "loader.pack", "loader.h2d", "train.step",
+            "train.epoch", "train.infer"} <= names
+    # the loader stages ran on the prefetch daemon thread, the steps on
+    # the main thread — distinct named tracks in the export
+    by_name = {}
+    for ev in obj["traceEvents"]:
+        if ev.get("ph") == "X":
+            by_name.setdefault(ev["name"], set()).add(ev["tid"])
+    assert by_name["loader.sample"].isdisjoint(by_name["train.step"])
+    # drained device counters surfaced as metrics and result fields
+    assert s["metrics"]["train.skipped_steps"] == res.skipped_steps
+    assert res.test_acc > 0
+
+
+def test_profiled_serving_spans_and_cache_metrics(tiny_dataset):
+    from repro.serving import GNNServer
+    from repro.train.gnn_minibatch import train_gnn_minibatch
+    res = train_gnn_minibatch("sage-sum", tiny_dataset, fanouts=(5, 5),
+                              batch_size=64, hidden=16, epochs=1,
+                              tune=False)
+    srv = GNNServer(res.final_params, tiny_dataset, arch="sage-sum",
+                    fanouts=(5, 5), tune=False, start=False,
+                    cache_capacity=64)
+    with obs.profiled(ops=True):
+        for seeds in ([1, 2, 3], [2, 3, 4]):
+            t = srv.submit(seeds)
+            srv.run_pending(force=True)
+            t.result(30.0)
+    obj = to_chrome_trace()
+    assert validate_chrome_trace(obj) == []
+    s = trace_summary.summarize(obj)
+    assert s["coverage"] >= 0.9, s["coverage"]
+    names = {r["name"] for r in s["rows"]}
+    assert {"serve.flush", "serve.sample", "serve.pack", "serve.gather",
+            "serve.apply", "serve.queue_wait"} <= names
+    m = s["metrics"]
+    assert m["serve.requests"] == 2 and m["serve.flushes"] == 2
+    assert m["cache.hits"] + m["cache.misses"] > 0
+    assert m["cache.hits"] == srv.cache.stats.hits
+    assert m["serve.latency_s"]["count"] == 2
+    stats = srv.latency_stats()
+    assert stats["p99_ms"] >= stats["p50_ms"] > 0
+    assert stats["queue_wait_p99_ms"] >= 0
+
+
+def test_latency_stats_idle_defaults(tiny_dataset):
+    from repro.serving import GNNServer
+    from repro.train.gnn_minibatch import make_block_model
+    init, _, _, _ = make_block_model(
+        "sage-sum", tiny_dataset.num_features, 16,
+        tiny_dataset.num_classes, 2)
+    import jax
+    params = init(jax.random.PRNGKey(0))
+    srv = GNNServer(params, tiny_dataset, arch="sage-sum", fanouts=(5, 5),
+                    tune=False, start=False, cache_capacity=16)
+    stats = srv.latency_stats()
+    for key in ("p50_ms", "p99_ms", "mean_ms", "queue_wait_p50_ms",
+                "queue_wait_p99_ms", "mean_flush_size"):
+        assert stats[key] == 0.0, (key, stats)
+    assert stats["requests"] == 0 and stats["flushes"] == 0
+
+
+def test_profiled_smoke(tiny_dataset, tmp_path):
+    """The CI smoke: one profiled trace holding training, sampler, and
+    serving spans plus kernel-dispatch records, schema-valid on disk."""
+    from repro.serving import GNNServer
+    from repro.train.gnn_minibatch import train_gnn_minibatch
+    with obs.profiled(ops=True):
+        res = train_gnn_minibatch("sage-sum", tiny_dataset, fanouts=(5, 5),
+                                  batch_size=64, hidden=16, epochs=1,
+                                  tune=False, profile=True)
+        srv = GNNServer(res.final_params, tiny_dataset, arch="sage-sum",
+                        fanouts=(5, 5), tune=False, start=False,
+                        cache_capacity=64)
+        t = srv.submit([1, 2, 3])
+        srv.run_pending(force=True)
+        t.result(30.0)
+    path = write_chrome_trace(str(tmp_path / "smoke_trace.json"))
+    obj = json.load(open(path))
+    assert validate_chrome_trace(obj) == []
+    cats = {str(e["name"]).split(".", 1)[0]
+            for e in obj["traceEvents"] if e.get("ph") in ("X", "i")}
+    assert {"train", "loader", "serve", "op"} <= cats, cats
+    # the summary tool digests it end to end
+    out = trace_summary.format_summary(
+        trace_summary.summarize(obj))
+    assert "per-span attribution" in out

@@ -71,6 +71,7 @@ def sampling_table() -> str:
     dp = [r for r in run["rows"] if r.get("kind") == "data_parallel"]
     smp = [r for r in run["rows"] if r.get("kind") == "sampler"]
     rec = [r for r in run["rows"] if r.get("kind") == "recovery"]
+    stg = [r for r in run["rows"] if r.get("kind") == "stages"]
     lines = ["| dataset | arch | sampled (s/epoch) | full-batch (s/epoch) | "
              "test acc (mb / fb) | traces/buckets | plans |",
              "|---|---|---|---|---|---|---|"]
@@ -111,6 +112,17 @@ def sampling_table() -> str:
                 f"{r['sample_only_s']:.3f} | "
                 f"{r['n_traces']}/{r['n_buckets']} | "
                 f"{r['mb_test_acc']:.3f} |")
+    if stg:
+        lines.append("\nPer-stage breakdown (one profiled epoch under the "
+                     "`repro.obs` tracer; loader stages overlap the device "
+                     "step on the prefetch thread, so fractions can sum "
+                     "past 1.0):\n")
+        lines.append("| stage | calls | total | mean | epoch frac |")
+        lines.append("|---|---|---|---|---|")
+        for r in stg:
+            lines.append(
+                f"| `{r['stage']}` | {r['count']} | {_ms(r['total_s'])} | "
+                f"{_ms(r['mean_s'])} | {r['frac_epoch']:.0%} |")
     if rec:
         lines.append("\nCheckpointing overhead (async saves on the ckpt "
                      "cadence vs no checkpointing):\n")

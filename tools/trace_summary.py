@@ -1,0 +1,204 @@
+"""Text attribution table for an exported Chrome-trace JSON file.
+
+    PYTHONPATH=src python tools/trace_summary.py trace.json [--top N]
+
+Reads the file ``repro.obs.export.write_chrome_trace`` produced and
+prints where the wall time went: per-span-name totals (count, total,
+mean, share of wall), a per-layer (category) rollup, timeline coverage
+(union of span intervals over the measured window — the acceptance
+criterion the profiled tests pin at >= 90%), the autotuner's decision
+log, and the metrics snapshot riding in ``otherData``.
+
+Importable: ``summarize(obj)`` returns the aggregation as a dict and
+``format_summary(...)`` renders it, so tests and the CI smoke step can
+assert on numbers instead of scraping stdout.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import defaultdict
+
+__all__ = ["load_trace", "summarize", "format_summary", "coverage_of"]
+
+
+def load_trace(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _complete_events(obj: dict) -> list[dict]:
+    return [ev for ev in obj.get("traceEvents", ())
+            if ev.get("ph") == "X"]
+
+
+def _instants(obj: dict) -> list[dict]:
+    return [ev for ev in obj.get("traceEvents", ())
+            if ev.get("ph") == "i"]
+
+
+def interval_union_us(events) -> float:
+    """Total length of the union of ``[ts, ts+dur]`` intervals (µs) —
+    overlap-free, so nested/concurrent spans aren't double counted."""
+    ivs = sorted((float(ev["ts"]), float(ev["ts"]) + float(ev["dur"]))
+                 for ev in events)
+    total = 0.0
+    cur_a = cur_b = None
+    for a, b in ivs:
+        if cur_b is None or a > cur_b:
+            if cur_b is not None:
+                total += cur_b - cur_a
+            cur_a, cur_b = a, b
+        else:
+            cur_b = max(cur_b, b)
+    if cur_b is not None:
+        total += cur_b - cur_a
+    return total
+
+
+def coverage_of(obj: dict) -> float:
+    """Fraction of the measured window covered by at least one span:
+    union(span intervals) / (last end - first start). 0.0 for an empty
+    trace."""
+    evs = _complete_events(obj)
+    if not evs:
+        return 0.0
+    t0 = min(float(ev["ts"]) for ev in evs)
+    t1 = max(float(ev["ts"]) + float(ev["dur"]) for ev in evs)
+    if t1 <= t0:
+        return 0.0
+    return interval_union_us(evs) / (t1 - t0)
+
+
+def summarize(obj: dict) -> dict:
+    """Aggregate a Trace-Event JSON object into attribution rows."""
+    evs = _complete_events(obj)
+    by_name: dict[str, list[float]] = defaultdict(list)
+    for ev in evs:
+        by_name[ev["name"]].append(float(ev["dur"]))
+    wall_us = 0.0
+    if evs:
+        wall_us = (max(float(e["ts"]) + float(e["dur"]) for e in evs)
+                   - min(float(e["ts"]) for e in evs))
+    rows = []
+    for name, durs in by_name.items():
+        total = sum(durs)
+        rows.append({
+            "name": name,
+            "count": len(durs),
+            "total_ms": total / 1e3,
+            "mean_ms": total / len(durs) / 1e3,
+            "max_ms": max(durs) / 1e3,
+            "pct_wall": (100.0 * total / wall_us) if wall_us else 0.0,
+        })
+    rows.sort(key=lambda r: r["total_ms"], reverse=True)
+
+    # per-layer rollup: union within each category so a layer's share is
+    # honest even when its spans nest (train.epoch contains train.step)
+    by_cat: dict[str, list[dict]] = defaultdict(list)
+    for ev in evs:
+        by_cat[str(ev["name"]).split(".", 1)[0]].append(ev)
+    cats = [{
+        "category": cat,
+        "count": len(cevs),
+        "busy_ms": interval_union_us(cevs) / 1e3,
+        "pct_wall": (100.0 * interval_union_us(cevs) / wall_us)
+        if wall_us else 0.0,
+    } for cat, cevs in by_cat.items()]
+    cats.sort(key=lambda r: r["busy_ms"], reverse=True)
+
+    # instant markers: op.*.trace dispatch counts + tuning decisions
+    op_counts: dict[str, int] = defaultdict(int)
+    tuning: list[dict] = []
+    for ev in _instants(obj):
+        name = str(ev["name"])
+        if name.startswith("op."):
+            op_counts[name] += 1
+        elif name.startswith("tuning."):
+            tuning.append({"name": name, **ev.get("args", {})})
+
+    other = obj.get("otherData", {}) or {}
+    return {
+        "wall_ms": wall_us / 1e3,
+        "coverage": coverage_of(obj),
+        "rows": rows,
+        "categories": cats,
+        "op_counts": dict(sorted(op_counts.items())),
+        "tuning": tuning,
+        "metrics": other.get("metrics", {}),
+        "n_spans": other.get("n_spans", len(evs)),
+        "n_dropped": other.get("n_dropped", 0),
+    }
+
+
+def _table(header: list[str], rows: list[list[str]]) -> str:
+    widths = [max(len(h), *(len(r[i]) for r in rows)) if rows else len(h)
+              for i, h in enumerate(header)]
+    def fmt(cells):
+        return "  ".join(c.ljust(w) for c, w in zip(cells, widths)).rstrip()
+    lines = [fmt(header), fmt(["-" * w for w in widths])]
+    lines.extend(fmt(r) for r in rows)
+    return "\n".join(lines)
+
+
+def format_summary(summary: dict, *, top: int = 25) -> str:
+    out = [f"wall: {summary['wall_ms']:.2f} ms   "
+           f"coverage: {summary['coverage']:.1%}   "
+           f"spans: {summary['n_spans']}"
+           + (f"   dropped: {summary['n_dropped']}"
+              if summary["n_dropped"] else "")]
+    out.append("\n== per-layer (union within layer) ==")
+    out.append(_table(
+        ["layer", "spans", "busy", "% wall"],
+        [[c["category"], str(c["count"]), f"{c['busy_ms']:.2f} ms",
+          f"{c['pct_wall']:.1f}%"] for c in summary["categories"]]))
+    out.append("\n== per-span attribution ==")
+    rows = summary["rows"][:top]
+    out.append(_table(
+        ["span", "count", "total", "mean", "max", "% wall"],
+        [[r["name"], str(r["count"]), f"{r['total_ms']:.2f} ms",
+          f"{r['mean_ms']:.3f} ms", f"{r['max_ms']:.3f} ms",
+          f"{r['pct_wall']:.1f}%"] for r in rows]))
+    if len(summary["rows"]) > top:
+        out.append(f"... {len(summary['rows']) - top} more span names")
+    if summary["op_counts"]:
+        out.append("\n== jitted op dispatches (instants; time is fused "
+                   "into the owning step span) ==")
+        out.append(_table(
+            ["op", "count"],
+            [[k, str(v)] for k, v in summary["op_counts"].items()]))
+    if summary["tuning"]:
+        out.append("\n== tuning decisions ==")
+        trows = []
+        for t in summary["tuning"]:
+            detail = ", ".join(f"{k}={v}" for k, v in t.items()
+                               if k not in ("name", "candidates"))
+            trows.append([t["name"], detail])
+        out.append(_table(["event", "detail"], trows))
+    if summary["metrics"]:
+        out.append("\n== metrics ==")
+        mrows = []
+        for name, m in sorted(summary["metrics"].items()):
+            if isinstance(m, dict):
+                detail = ", ".join(f"{k}={v:.4g}" if isinstance(v, float)
+                                   else f"{k}={v}"
+                                   for k, v in sorted(m.items()))
+            else:
+                detail = f"{m:.6g}" if isinstance(m, float) else str(m)
+            mrows.append([name, detail])
+        out.append(_table(["metric", "value"], mrows))
+    return "\n".join(out)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome-trace JSON file "
+                    "(repro.obs.export.write_chrome_trace output)")
+    ap.add_argument("--top", type=int, default=25,
+                    help="span-name rows to print (default 25)")
+    args = ap.parse_args(argv)
+    print(format_summary(summarize(load_trace(args.trace)), top=args.top))
+
+
+if __name__ == "__main__":
+    main()
