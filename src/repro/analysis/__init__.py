@@ -1,0 +1,23 @@
+"""repro.analysis — static correctness analyzer for this repo's three
+recurring, statically-detectable bug classes (see ``docs/architecture.md``
+"Static analysis"):
+
+* collective-safety / lockstep contracts over traced jaxprs
+  (:mod:`repro.analysis.collectives` — the PR 5/PR 7 deadlock class);
+* a Pallas kernel audit: VMEM bounds, index-map bounds, sentinel
+  routing, known-bad tile shapes (:mod:`repro.analysis.pallas_audit`);
+* an AST lint for trace-bloat constants, shadowed imports, impure calls
+  in traced code, static-field mutation (:mod:`repro.analysis.lint`);
+* plus the retrace-budget report (:mod:`repro.analysis.retrace`).
+
+Run ``python -m repro.analysis`` (CI adds ``--fail-on-new`` against the
+committed ``analysis-baseline.json``).
+"""
+from repro.analysis.baseline import Baseline, Suppression, load_baseline, \
+    write_baseline
+from repro.analysis.findings import CODES, Finding, findings_to_json, \
+    format_finding, sort_findings
+
+__all__ = ["Finding", "CODES", "format_finding", "findings_to_json",
+           "sort_findings", "Baseline", "Suppression", "load_baseline",
+           "write_baseline"]

@@ -1,0 +1,122 @@
+"""``python -m repro.analysis`` — run the static passes, gate on the
+baseline.
+
+Usage::
+
+    python -m repro.analysis [paths...] [options]
+
+    paths                 files/dirs for the AST lint (default: src)
+    --passes P[,P...]     subset of collectives,pallas,lint,retrace (all)
+    --baseline PATH       suppression file (default analysis-baseline.json)
+    --fail-on-new         exit 1 if any gating finding lacks a baseline
+                          entry (what CI runs)
+    --write-baseline      snapshot current gating findings as the baseline
+                          (placeholder reasons — edit before committing)
+    --json [PATH]         machine-readable findings to PATH (default
+                          stdout)
+    --quiet               suppress info findings in the text report
+
+Exit status: 0 clean (or not gating), 1 new findings under
+``--fail-on-new``, 2 bad invocation.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis.baseline import DEFAULT_BASELINE, load_baseline, \
+    write_baseline
+from repro.analysis.findings import Finding, findings_to_json, \
+    format_finding, sort_findings
+
+PASSES = ("collectives", "pallas", "lint", "retrace")
+
+
+def run_passes(paths: list[str], passes: tuple[str, ...] = PASSES
+               ) -> list[Finding]:
+    findings: list[Finding] = []
+    if "collectives" in passes:
+        from repro.analysis.collectives import analyze_collectives
+        findings += analyze_collectives()
+    if "pallas" in passes:
+        from repro.analysis.pallas_audit import analyze_pallas
+        findings += analyze_pallas()
+    if "lint" in passes:
+        from repro.analysis.lint import analyze_lint
+        for p in paths:
+            findings += analyze_lint(p)
+    if "retrace" in passes:
+        from repro.analysis.retrace import analyze_retrace
+        findings += analyze_retrace()
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static correctness analyzer: collective safety, "
+                    "Pallas kernel audit, AST lint, retrace budgets")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs for the AST lint (default: src)")
+    ap.add_argument("--passes", default=",".join(PASSES))
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--fail-on-new", action="store_true")
+    ap.add_argument("--write-baseline", action="store_true")
+    ap.add_argument("--json", nargs="?", const="-", default=None)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    passes = tuple(p.strip() for p in args.passes.split(",") if p.strip())
+    unknown = [p for p in passes if p not in PASSES]
+    if unknown:
+        print(f"unknown pass(es): {unknown}; choose from {PASSES}",
+              file=sys.stderr)
+        return 2
+    paths = args.paths or ["src"]
+
+    findings = sort_findings(run_passes(paths, passes))
+
+    if args.write_baseline:
+        bl = write_baseline(args.baseline, findings)
+        print(f"wrote {len(bl.suppressions)} suppressions to "
+              f"{args.baseline} (replace the placeholder reasons)")
+        return 0
+
+    baseline = load_baseline(args.baseline)
+    new, suppressed, unused = baseline.split(findings)
+
+    shown = 0
+    for f in findings:
+        if args.quiet and f.severity == "info":
+            continue
+        status = ("  [baselined]" if f.gating and f in suppressed
+                  else "  [NEW]" if f.gating else "")
+        print(format_finding(f) + status)
+        shown += 1
+    for s in unused:
+        print(f"NOTE    unused baseline entry {s.code} {s.file} "
+              f"[{s.obj}]: consider removing (reason was: {s.reason})")
+
+    n_err = sum(f.severity == "error" for f in findings)
+    n_warn = sum(f.severity == "warning" for f in findings)
+    n_info = len(findings) - n_err - n_warn
+    print(f"\n{len(findings)} findings ({n_err} errors, {n_warn} "
+          f"warnings, {n_info} info); {len(new)} new, "
+          f"{len(suppressed)} baselined, {len(unused)} unused "
+          f"suppressions  [passes: {', '.join(passes)}]")
+
+    if args.json is not None:
+        payload = findings_to_json(findings, new=new,
+                                   suppressed=suppressed)
+        if args.json == "-":
+            print(payload)
+        else:
+            with open(args.json, "w") as fh:
+                fh.write(payload + "\n")
+
+    if args.fail_on_new and new:
+        print(f"\nFAIL: {len(new)} finding(s) not in the baseline "
+              f"({args.baseline}); fix them or add a suppression with "
+              f"a reason", file=sys.stderr)
+        return 1
+    return 0

@@ -1,0 +1,451 @@
+"""Pass 1 — jaxpr-level collective safety + lockstep contracts.
+
+The PR 5 deadlock class: a data-parallel step whose shards can disagree
+about *whether* (or how many times) a collective is issued hangs the mesh
+at the first unequal step — `psum` is a rendezvous, and a shard that
+skipped it waits forever. The repo's fix was structural (lockstep loader
+contract, unanimous skip decisions); this pass makes the property
+*statically checkable*: every registered step function is abstractly
+traced (``jax.make_jaxpr`` — no device execution, runs on forced CPU) and
+its jaxpr is walked to verify
+
+* every ``psum`` / ``all_gather`` / ``reduce_scatter`` / ``ppermute``
+  names only axes bound by an enclosing ``shard_map`` (COL003);
+* no collective sits under *divergent* traced control flow: a ``cond``
+  whose branches issue different collective sequences (COL001) or a
+  ``while`` loop (value-dependent trip count, COL002). A ``cond`` whose
+  branches issue the *same* sequence is lockstep-safe — every shard
+  rendezvouses either way — and ``scan`` bodies are safe because the trip
+  count is static.
+
+Python-level value-dependent control flow (the other half of the PR 5
+bug) cannot appear here by construction: it is resolved at trace time, so
+whatever the trace captured *is* the contract — which is why the pass
+also **emits the ordered collective sequence per function** (COL100).
+That sequence is the function's lockstep contract: two shards running the
+same compiled step issue exactly this sequence, so any cross-shard
+divergence must come from the *callers* (unequal batch counts — the
+loader contract), and a contract regression (a sync appearing inside a
+branch, a reordered psum) shows up as a diff in CI rather than a hang at
+step 3,000.
+
+Targets are registered in :data:`TARGETS`; each declares the minimum
+device count it needs (the shard_map'd 2-shard steps need 2 — CI forces
+``XLA_FLAGS=--xla_force_host_platform_device_count=2``). Targets this
+process cannot run are reported as COL101 (info), never silently skipped.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Iterable, Optional
+
+from repro.analysis.findings import Finding
+
+__all__ = ["analyze_collectives", "collective_contract", "walk_jaxpr",
+           "TARGETS", "Target"]
+
+#: communicating primitives — each is a cross-shard rendezvous.
+#: ``pbroadcast`` is deliberately absent: under check_rep shard_map it is
+#: a replication-*typing* no-op (no wire traffic), and including it buries
+#: the real contract under hundreds of entries. ``psum2`` is psum's
+#: internal name under check_rep; normalized on display.
+COLLECTIVE_PRIMS = frozenset({
+    "psum", "psum2", "pmax", "pmin", "pmean", "ppermute",
+    "all_gather", "all_to_all", "reduce_scatter", "pgather",
+})
+
+_PRIM_ALIAS = {"psum2": "psum"}
+
+
+def _rle(seq: list[str]) -> list[str]:
+    """Collapse consecutive repeats: 16 per-leaf gradient psums render as
+    one ``"psum(data) x16"`` entry. Deterministic, so compressed branch
+    sequences still compare exactly."""
+    out: list[str] = []
+    for s in seq:
+        prev = out[-1] if out else None
+        base = prev.rsplit(" x", 1)[0] if prev else None
+        if base == s:
+            n = int(prev.rsplit(" x", 1)[1]) if " x" in prev else 1
+            out[-1] = f"{s} x{n + 1}"
+        else:
+            out.append(s)
+    return out
+
+#: primitives whose sub-jaxprs get special treatment
+_CONTROL = frozenset({"cond", "while", "scan", "shard_map"})
+
+
+def _named_axes(params: dict) -> tuple[str, ...]:
+    """Axis *names* a collective eqn references (ints are positional array
+    axes — e.g. ``reduce_sum`` — and are not collective axes)."""
+    out = []
+    for key in ("axes", "axis_name"):
+        v = params.get(key)
+        if v is None:
+            continue
+        for ax in v if isinstance(v, (tuple, list)) else (v,):
+            if isinstance(ax, str):
+                out.append(ax)
+    return tuple(out)
+
+
+def _sub_jaxprs(v) -> Iterable:
+    """Jaxpr-like values inside one eqn param value."""
+    vals = v if isinstance(v, (tuple, list)) else (v,)
+    for item in vals:
+        if hasattr(item, "jaxpr") and hasattr(item.jaxpr, "eqns"):
+            yield item.jaxpr            # ClosedJaxpr
+        elif hasattr(item, "eqns"):
+            yield item                  # raw Jaxpr
+
+
+@dataclasses.dataclass(frozen=True)
+class _Ctx:
+    bound: frozenset        # axis names bound by enclosing shard_maps
+    in_while: bool = False
+
+
+def walk_jaxpr(jaxpr, *, bound_axes: frozenset = frozenset(),
+               _ctx: Optional[_Ctx] = None,
+               findings: Optional[list] = None,
+               file: str = "", obj: str = "") -> list[str]:
+    """Walk ``jaxpr`` recursively; return the ordered collective sequence
+    (the lockstep contract) and append COL001/COL002/COL003 findings.
+
+    Contract entries: ``"psum(data)"``, ``"all_gather(data)"``; a scan
+    whose body issues collectives contributes
+    ``"scan[n](psum(data), ...)"`` (static trip count — safe, but part of
+    the contract); a safe cond (identical branch sequences) contributes
+    its common sequence prefixed ``"cond:"``.
+    """
+    ctx = _ctx or _Ctx(bound=frozenset(bound_axes))
+    fs = findings if findings is not None else []
+    seq: list[str] = []
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name in COLLECTIVE_PRIMS:
+            axes = _named_axes(eqn.params)
+            if not axes:        # positional-only reduction, not a collective
+                continue
+            for ax in axes:
+                if ax not in ctx.bound:
+                    fs.append(Finding(
+                        code="COL003", file=file, obj=obj,
+                        message=f"{name} over axis {ax!r} which no "
+                                f"enclosing shard_map binds "
+                                f"(bound: {sorted(ctx.bound) or 'none'})"))
+            if ctx.in_while:
+                fs.append(Finding(
+                    code="COL002", file=file, obj=obj,
+                    message=f"{name}({','.join(axes)}) inside a while "
+                            f"loop: the trip count is value-dependent, so "
+                            f"shards can disagree on how many times this "
+                            f"rendezvous is issued"))
+            seq.append(f"{_PRIM_ALIAS.get(name, name)}({','.join(axes)})")
+            continue
+        if name == "cond":
+            branch_seqs = [
+            ]
+            for br in eqn.params["branches"]:
+                sub = list(_sub_jaxprs(br))
+                branch_seqs.append(
+                    walk_jaxpr(sub[0], _ctx=ctx, findings=fs,
+                               file=file, obj=obj) if sub else [])
+            if len(set(map(tuple, branch_seqs))) > 1:
+                fs.append(Finding(
+                    code="COL001", file=file, obj=obj,
+                    message="cond branches issue different collective "
+                            "sequences "
+                            f"{[list(s) for s in branch_seqs]} — shards "
+                            "taking different branches deadlock at the "
+                            "first unmatched rendezvous (the PR 5 class)",
+                    detail={"branches": branch_seqs}))
+            elif branch_seqs and branch_seqs[0]:
+                seq.extend(f"cond:{s}" for s in branch_seqs[0])
+        elif name == "while":
+            wctx = dataclasses.replace(ctx, in_while=True)
+            for key in ("cond_jaxpr", "body_jaxpr"):
+                for sub in _sub_jaxprs(eqn.params[key]):
+                    # COL002 emitted inside; while-loop collectives are
+                    # excluded from the contract (count is unknowable)
+                    walk_jaxpr(sub, _ctx=wctx, findings=fs,
+                               file=file, obj=obj)
+        elif name == "scan":
+            body = list(_sub_jaxprs(eqn.params["jaxpr"]))
+            inner = (walk_jaxpr(body[0], _ctx=ctx, findings=fs,
+                                file=file, obj=obj) if body else [])
+            if inner:
+                n = eqn.params.get("length", "?")
+                seq.append(f"scan[{n}]({', '.join(_rle(inner))})")
+        elif name == "shard_map":
+            mesh = eqn.params.get("mesh")
+            names = tuple(getattr(mesh, "axis_names", ()) or ())
+            smctx = dataclasses.replace(
+                ctx, bound=ctx.bound | frozenset(names))
+            for sub in _sub_jaxprs(eqn.params["jaxpr"]):
+                seq.extend(walk_jaxpr(sub, _ctx=smctx, findings=fs,
+                                      file=file, obj=obj))
+        else:
+            for v in eqn.params.values():
+                for sub in _sub_jaxprs(v):
+                    seq.extend(walk_jaxpr(sub, _ctx=ctx, findings=fs,
+                                          file=file, obj=obj))
+    return seq
+
+
+def collective_contract(fn: Callable, *args,
+                        bound_axes: Iterable[str] = (),
+                        file: str = "", obj: str = "",
+                        findings: Optional[list] = None) -> list[str]:
+    """Trace ``fn(*args)`` abstractly and return its lockstep contract.
+    Findings (COL001/2/3) are appended to ``findings`` when given."""
+    import jax
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    return _rle(walk_jaxpr(jaxpr.jaxpr, bound_axes=frozenset(bound_axes),
+                           findings=findings, file=file, obj=obj))
+
+
+# --------------------------------------------------------------------------
+# Registered analysis targets — the repo's step functions
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Target:
+    """One registered step function: ``build()`` returns ``(fn, args)``
+    small enough to ``make_jaxpr`` on CPU in well under a second."""
+    name: str               # reported as the finding obj
+    file: str               # repo-relative file the function lives in
+    min_devices: int
+    build: Callable         # () -> (fn, args tuple)
+
+
+def _tiny_graph(n: int = 24, deg: int = 3, seed: int = 0):
+    import numpy as np
+    from repro.core import sparse as sp
+    rng = np.random.default_rng(seed)
+    dst = np.repeat(np.arange(n), deg)
+    src = rng.integers(0, n, size=n * deg)
+    val = np.ones(n * deg, np.float32)
+    return sp.csr_from_coo(sp.coo_from_edges(src, dst, val, n, n))
+
+
+def _minibatch_pieces(num_shards: int, *, batch_size: int = 8,
+                      fanouts=(2, 2), k: int = 4, seed: int = 0):
+    """apply_blocks/opt/params plus one packed (possibly shard-stacked)
+    batch — the argument set ``make_minibatch_step`` traces on."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.optim import adamw
+    from repro.sampling import (BlockPlanCache, NeighborSampler,
+                                merge_buckets, pack_block, pad_sell_steps,
+                                plan_buckets, stack_blocks)
+    from repro.train.gnn_minibatch import make_block_model
+
+    csr = _tiny_graph()
+    n = csr.nrows
+    sampler = NeighborSampler(csr, fanouts, seed=seed)
+    init, _, apply_blocks, dims = make_block_model(
+        "sage-mean", k, 8, 3, len(fanouts))
+    params = init(jax.random.PRNGKey(seed))
+    opt = adamw(1e-2)
+    opt_state = opt.init(params)
+    cache = BlockPlanCache(semiring="mean", tune=False)
+
+    shard_blocks = [sampler.sample(np.arange(batch_size), round=si)
+                    for si in range(num_shards)]
+    buckets = merge_buckets([
+        plan_buckets(blocks, batch_size=batch_size, fanouts=fanouts)
+        for blocks in shard_blocks])
+
+    def pack(blocks):
+        pbs = []
+        for blk, bk, kk in zip(blocks, buckets, dims):
+            plan = cache.plan_for(blk, n_dst=bk.n_dst, n_src=bk.n_src,
+                                  nnz=bk.nnz, k_hint=kk)
+            pbs.append(pack_block(blk, n_dst=bk.n_dst, n_src=bk.n_src,
+                                  nnz=bk.nnz, plan=plan,
+                                  ell_width=bk.ell_width,
+                                  sell_steps=bk.sell_steps))
+        return pbs
+
+    shard_pbs = [pack(blocks) for blocks in shard_blocks]
+    x = jnp.zeros((n, k), jnp.float32)
+    y = jnp.zeros((n,), jnp.int32)
+    sids = jnp.arange(batch_size, dtype=jnp.int32)
+    nr = jnp.int32(batch_size)
+    if num_shards == 1:
+        pbs = tuple(shard_pbs[0])
+        args = (params, opt_state, pbs, sids, nr, x, y,
+                jnp.int32(0), None)
+    else:
+        layers = []
+        for i in range(len(fanouts)):
+            per = [spb[i] for spb in shard_pbs]
+            if any(pb.sell is not None for pb in per):
+                steps = max(pb.sell.n_steps for pb in per)
+                per = [pad_sell_steps(pb, steps) for pb in per]
+            layers.append(per)
+        pbs = tuple(stack_blocks(per) for per in layers)
+        args = (params, opt_state, pbs,
+                jnp.tile(sids, (num_shards, 1)),
+                jnp.full((num_shards,), batch_size, jnp.int32),
+                x, y, jnp.int32(0), None)
+    return apply_blocks, opt, args
+
+
+def _data_mesh(num_shards: int):
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+    return Mesh(np.array(jax.devices()[:num_shards]), ("data",))
+
+
+def _build_minibatch(num_shards: int, grad_sync: str):
+    from repro.train.gnn_minibatch import init_step_stats, make_minibatch_step
+    apply_blocks, opt, args = _minibatch_pieces(num_shards)
+    mesh = _data_mesh(num_shards) if num_shards > 1 else None
+    step = make_minibatch_step(apply_blocks, opt, batch_size=8, mesh=mesh,
+                               num_shards=num_shards, grad_sync=grad_sync)
+    stats = init_step_stats()
+    return step, args[:-1] + (stats,)
+
+
+def _build_device_minibatch(num_shards: int, grad_sync: str = "fp32"):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.optim import adamw
+    from repro.sampling import (BlockPlanCache, DeviceSampler,
+                                NeighborSampler, device_graph_from_csr)
+    from repro.train.gnn_minibatch import (init_step_stats,
+                                           make_block_model,
+                                           make_device_minibatch_step)
+    batch_size, fanouts, k = 8, (2, 2), 4
+    csr = _tiny_graph()
+    mesh = _data_mesh(num_shards) if num_shards > 1 else None
+    dgraph = device_graph_from_csr(csr, mesh=mesh)
+    init, _, apply_blocks, dims = make_block_model(
+        "sage-mean", k, 8, 3, len(fanouts))
+    params = init(jax.random.PRNGKey(0))
+    opt = adamw(1e-2)
+    opt_state = opt.init(params)
+    dev = DeviceSampler(dgraph, fanouts, batch_size=batch_size, seed=0,
+                        src_caps=[batch_size * 3, batch_size * 9])
+    cache = BlockPlanCache(semiring="mean", tune=False)
+    probe = NeighborSampler(csr, fanouts, seed=0).sample(
+        np.arange(batch_size), round=0)
+    dev.set_plans([cache.plan_for(blk, n_dst=bk.n_dst, n_src=bk.n_src,
+                                  nnz=bk.nnz, k_hint=kk, sell_ok=False)
+                   for blk, bk, kk in zip(probe, dev.buckets, dims)])
+    step = make_device_minibatch_step(apply_blocks, opt, dev,
+                                      batch_size=batch_size, mesh=mesh,
+                                      num_shards=num_shards,
+                                      grad_sync=grad_sync)
+    sids = jnp.arange(batch_size, dtype=jnp.int32)
+    nr = jnp.int32(batch_size)
+    if num_shards > 1:
+        sids = jnp.tile(sids, (num_shards, 1))
+        nr = jnp.full((num_shards,), batch_size, jnp.int32)
+    x = jnp.zeros((csr.nrows, k), jnp.float32)
+    y = jnp.zeros((csr.nrows,), jnp.int32)
+    args = (params, opt_state, sids, nr, jnp.int32(0), x, y,
+            jnp.int32(0), init_step_stats())
+    return step, args
+
+
+def _build_distributed_spmm(kind: str):
+    import jax.numpy as jnp
+    from functools import partial
+    from repro.core.autotune import KernelPlan
+    from repro.dist.gnn import build_dist_graph, distributed_spmm
+    csr = _tiny_graph()
+    plan = (KernelPlan(kind="sell", sell_c=8) if kind == "sell" else None)
+    g = build_dist_graph(csr, num_parts=1, plan=plan)
+    mesh = _data_mesh(1)
+    h = jnp.ones((csr.ncols, 4), jnp.float32)
+    return partial(distributed_spmm, g, mesh=mesh), (h,)
+
+
+def _build_distributed_spmm_2d():
+    import jax.numpy as jnp
+    from functools import partial
+    from repro.dist.gnn2d import partition_2d, distributed_spmm_2d
+    from repro.dist.mesh import make_grid_mesh
+    csr = _tiny_graph()
+    g = partition_2d(csr, 1, 1)
+    mesh = make_grid_mesh(1)
+    h = jnp.ones((csr.ncols, 4), jnp.float32)
+    return partial(distributed_spmm_2d, g, mesh=mesh), (h,)
+
+
+def _build_lm_dp_step():
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.train import lm as TL
+    cfg = get_smoke_config("llama3-8b")
+    mesh = _data_mesh(1)
+    step, opt = TL.make_data_parallel_step(cfg, mesh)
+    state = TL.make_train_state(cfg, jax.random.PRNGKey(0), opt)
+    batch = TL.shaped_batch(cfg, 2, 16)   # ShapeDtypeStructs trace fine
+    return step, (state, batch)
+
+
+TARGETS: tuple[Target, ...] = (
+    Target("make_minibatch_step[dp1]", "src/repro/train/gnn_minibatch.py",
+           1, lambda: _build_minibatch(1, "fp32")),
+    Target("make_minibatch_step[dp2,fp32]",
+           "src/repro/train/gnn_minibatch.py",
+           2, lambda: _build_minibatch(2, "fp32")),
+    Target("make_minibatch_step[dp2,int8]",
+           "src/repro/train/gnn_minibatch.py",
+           2, lambda: _build_minibatch(2, "int8")),
+    Target("make_device_minibatch_step[dp1]",
+           "src/repro/train/gnn_minibatch.py",
+           1, lambda: _build_device_minibatch(1)),
+    Target("make_device_minibatch_step[dp2,fp32]",
+           "src/repro/train/gnn_minibatch.py",
+           2, lambda: _build_device_minibatch(2)),
+    Target("distributed_spmm[ell]", "src/repro/dist/gnn.py",
+           1, lambda: _build_distributed_spmm("ell")),
+    Target("distributed_spmm[sell]", "src/repro/dist/gnn.py",
+           1, lambda: _build_distributed_spmm("sell")),
+    Target("distributed_spmm_2d", "src/repro/dist/gnn2d.py",
+           1, lambda: _build_distributed_spmm_2d()),
+    Target("make_data_parallel_step[lm]", "src/repro/train/lm.py",
+           1, lambda: _build_lm_dp_step()),
+)
+
+
+def analyze_collectives(targets: tuple[Target, ...] = TARGETS
+                        ) -> list[Finding]:
+    """Run the collective-safety pass over every registered target the
+    process has devices for. COL100 info findings carry each extracted
+    contract; trace failures become COL004."""
+    import jax
+    ndev = len(jax.devices())
+    findings: list[Finding] = []
+    for t in targets:
+        if ndev < t.min_devices:
+            findings.append(Finding(
+                code="COL101", file=t.file, obj=t.name,
+                message=f"needs {t.min_devices} devices, have {ndev} "
+                        f"(CI forces the count via XLA_FLAGS)"))
+            continue
+        try:
+            fn, args = t.build()
+            contract = collective_contract(fn, *args, file=t.file,
+                                           obj=t.name, findings=findings)
+        except Exception as e:  # noqa: BLE001 — any trace failure is the finding
+            findings.append(Finding(
+                code="COL004", file=t.file, obj=t.name,
+                message=f"failed to trace: {type(e).__name__}: {e}"))
+            continue
+        findings.append(Finding(
+            code="COL100", file=t.file, obj=t.name,
+            message="lockstep contract: "
+                    + (" -> ".join(contract) if contract
+                       else "(no collectives)"),
+            detail={"contract": contract}))
+    return findings

@@ -1,0 +1,174 @@
+"""Finding model + the repo's finding-code registry.
+
+Every check in :mod:`repro.analysis` reports through one type —
+:class:`Finding` — carrying a stable *code* from the :data:`CODES`
+registry. The registry is the contract between the analyzer, the
+baseline-suppression file, the fixture tests (which assert exact codes)
+and the docs: ``tools/check_docs.py`` verifies that every code documented
+in ``docs/architecture.md`` exists here and vice versa, so the two can't
+drift.
+
+Severity semantics:
+
+* ``error`` — a defect class that has shipped a real bug in this repo
+  (deadlock, trace explosion, OOB DMA). Gates CI unless baselined.
+* ``warning`` — probably wrong or slow, worth a look; gates like errors.
+* ``info`` — reports, not defects: lockstep contracts, retrace budgets,
+  skipped targets. Never gates, never needs a baseline entry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Optional
+
+__all__ = ["Severity", "Finding", "CODES", "GATING", "code_severity",
+           "findings_to_json", "format_finding"]
+
+# severity ordering for sorting / gating
+Severity = str
+_SEV_ORDER = {"error": 0, "warning": 1, "info": 2}
+
+#: code -> (severity, one-line description). The single source of truth;
+#: docs/architecture.md documents exactly these (checked by check_docs.py).
+CODES: dict[str, tuple[str, str]] = {
+    # -- collective-safety pass (jaxpr walk) -----------------------------
+    "COL001": ("error",
+               "collective whose sequence differs across cond branches "
+               "(divergent control flow around a psum/all_gather — the "
+               "PR 5 lockstep-deadlock class)"),
+    "COL002": ("error",
+               "collective inside a while-loop body or predicate (trip "
+               "count is value-dependent, so shards can disagree on how "
+               "many times the collective is issued)"),
+    "COL003": ("error",
+               "collective referencing a mesh axis not bound by any "
+               "enclosing shard_map"),
+    "COL004": ("error",
+               "registered step function failed to trace (the collective "
+               "contract could not be extracted)"),
+    "COL100": ("info",
+               "lockstep collective contract: the ordered collective "
+               "sequence a step function issues per call"),
+    "COL101": ("info",
+               "collective-safety target skipped (needs more devices than "
+               "this process has)"),
+    # -- Pallas kernel audit ---------------------------------------------
+    "PAL001": ("error",
+               "per-step VMEM working set (block shapes x dtype x double "
+               "buffering) exceeds the VMEM budget"),
+    "PAL002": ("error",
+               "BlockSpec index map routes a block outside its operand "
+               "(OOB DMA) for some grid point"),
+    "PAL003": ("warning",
+               "operand dimension not divisible by its block shape "
+               "(implicit padding — bounds depend on Pallas pad semantics)"),
+    "PAL004": ("warning",
+               "output tile of shape (1, K) drives one of the 8 f32 "
+               "sublanes per step (the ELL sublane penalty)"),
+    "PAL005": ("error",
+               "scalar-prefetch-routed gather (sentinel routing) resolves "
+               "outside the gathered operand for the audited tables"),
+    "PAL100": ("info",
+               "Pallas kernel audit summary: grid, per-step VMEM bytes, "
+               "routed-gather bounds for one audited configuration"),
+    # -- AST lint pass ---------------------------------------------------
+    "LNT001": ("error",
+               "closure-captured numpy array constant inside a jit/traced "
+               "function (baked into every trace — the PR 5 trace-bloat "
+               "class)"),
+    "LNT002": ("error",
+               "module-vs-attribute import shadowing: `from pkg import "
+               "name` where pkg/name.py exists AND pkg/__init__ rebinds "
+               "`name` to a non-module (the PR 9 class)"),
+    "LNT003": ("error",
+               "np.random/time call inside a traced function (traces to a "
+               "compile-time constant, not a per-call value)"),
+    "LNT004": ("warning",
+               "assignment to a pytree field registered static "
+               "(meta_fields of a register_dataclass pytree must never "
+               "be mutated — stale trace caches)"),
+    # -- retrace-budget pass ---------------------------------------------
+    "RTB001": ("info",
+               "retrace budget report: distinct jit signatures a step "
+               "builder can compile under the bucket ladder"),
+    "RTB002": ("error",
+               "retrace budget exceeded: the bucket ladder admits more "
+               "distinct jit signatures than the budget"),
+    "RTB003": ("warning",
+               "unbounded signature space: a full-neighbor (fanout=None) "
+               "layer puts nnz/width on the ladder, so the signature "
+               "count grows with the observed graph, not the config"),
+}
+
+#: severities that participate in baseline matching / --fail-on-new
+GATING = ("error", "warning")
+
+
+def code_severity(code: str) -> str:
+    return CODES[code][0]
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One analyzer result. ``obj`` names the function / kernel / config
+    the finding is about (the baseline matches on it); ``detail`` carries
+    the machine-readable payload (contract sequences, byte counts...)."""
+    code: str
+    file: str                       # repo-relative path ('' = repo-level)
+    obj: str                        # function / kernel / target name
+    message: str
+    line: int = 0
+    detail: Optional[dict] = None
+
+    def __post_init__(self):
+        assert self.code in CODES, f"unregistered finding code {self.code}"
+
+    @property
+    def severity(self) -> str:
+        return code_severity(self.code)
+
+    @property
+    def gating(self) -> bool:
+        return self.severity in GATING
+
+    def key(self) -> tuple:
+        """Identity for baseline matching: deliberately line-insensitive
+        so unrelated edits above a suppressed finding don't un-suppress
+        it."""
+        return (self.code, self.file, self.obj)
+
+    def to_dict(self) -> dict:
+        d = {"code": self.code, "severity": self.severity,
+             "file": self.file, "line": self.line, "obj": self.obj,
+             "message": self.message}
+        if self.detail is not None:
+            d["detail"] = self.detail
+        return d
+
+
+def sort_findings(findings: list[Finding]) -> list[Finding]:
+    return sorted(findings, key=lambda f: (_SEV_ORDER[f.severity], f.code,
+                                           f.file, f.obj, f.line))
+
+
+def format_finding(f: Finding) -> str:
+    loc = f.file + (f":{f.line}" if f.line else "")
+    obj = f" [{f.obj}]" if f.obj else ""
+    return f"{f.severity.upper():7s} {f.code} {loc}{obj}: {f.message}"
+
+
+def findings_to_json(findings: list[Finding], *, new: list[Finding],
+                     suppressed: list[Finding]) -> str:
+    newk = {f.key() for f in new}
+    supk = {f.key() for f in suppressed}
+
+    def tag(f: Finding) -> dict:
+        d = f.to_dict()
+        d["status"] = ("new" if f.key() in newk else
+                       "baselined" if f.key() in supk else "info")
+        return d
+
+    return json.dumps({"schema": 1,
+                       "findings": [tag(f) for f in sort_findings(findings)]},
+                      indent=2, default=str)

@@ -1,0 +1,410 @@
+"""Pass 3 — AST lint for the repo's recurring Python-side hazards.
+
+Pure ``ast`` walking, no imports of the analyzed code. Four checks, each
+generalizing a bug this repo actually shipped:
+
+* **LNT001** (PR 5's trace-bloat bug) — a nested function that JAX traces
+  (jitted, shard_map'd, scanned...) reads a closure variable whose
+  binding in the enclosing scope is a ``np.*`` array constructor. The
+  array is baked into *every* trace as a literal constant: each retrace
+  re-embeds it, HLO size and compile time grow with the data, and two
+  traces differing only in the constant don't share a cache entry.
+* **LNT002** (PR 9's bug, generalized) — ``from pkg import name`` where
+  ``pkg/name.py`` exists on disk **and** ``pkg/__init__`` rebinds
+  ``name`` to a non-module (``from .name import name`` — the
+  function-over-module idiom). What the import yields then depends on
+  package init order, and a module object silently replacing a callable
+  (or vice versa) fails far from the import line.
+* **LNT003** — ``np.random.*`` / ``random.*`` / ``time.*`` calls inside
+  a traced function: they run at *trace* time, so the "random" draw or
+  timestamp is a compile-time constant replayed by every call of the
+  compiled program.
+* **LNT004** — attribute assignment to a field registered static
+  (``meta_fields`` of a ``register_dataclass`` pytree). Static fields
+  participate in jit cache keys by *value*; mutating one in place
+  desynchronizes live traces from the object they were specialized on.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Optional
+
+from repro.analysis.findings import Finding
+
+__all__ = ["analyze_lint", "lint_source", "collect_meta_fields",
+           "collect_shadowed_names"]
+
+#: callee names that hand a function to the tracer. Matched against the
+#: last attribute segment, so ``jax.jit``/``jax.lax.scan``/bare ``jit``
+#: all hit.
+_TRACING_CALLEES = frozenset({
+    "jit", "shard_map", "scan", "fori_loop", "while_loop", "cond",
+    "switch", "vmap", "pmap", "grad", "value_and_grad", "make_jaxpr",
+    "pallas_call", "checkpoint", "remat", "custom_vjp", "custom_jvp",
+})
+
+#: np.* constructors whose result is a materialized ndarray constant
+_NP_ARRAY_FNS = frozenset({
+    "array", "arange", "zeros", "ones", "full", "eye", "asarray",
+    "ascontiguousarray", "linspace", "concatenate", "stack", "repeat",
+    "tile", "empty", "loadtxt", "load",
+})
+
+#: (module alias root, attr prefix) calls that are impure at trace time
+_IMPURE_ROOTS = {
+    "np": ("random",), "numpy": ("random",),
+    "random": (), "time": (),
+}
+_TIME_FNS = frozenset({"time", "perf_counter", "monotonic", "time_ns",
+                       "perf_counter_ns", "monotonic_ns"})
+
+
+def _attr_chain(node) -> list[str]:
+    """``np.random.default_rng`` -> ['np', 'random', 'default_rng']."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return []
+
+
+def _callee_tail(call: ast.Call) -> str:
+    chain = _attr_chain(call.func)
+    return chain[-1] if chain else ""
+
+
+def _is_np_array_expr(node) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    chain = _attr_chain(node.func)
+    return (len(chain) >= 2 and chain[0] in ("np", "numpy")
+            and (chain[1] in _NP_ARRAY_FNS or chain[1] == "random"))
+
+
+def _is_traced_def(fn: ast.FunctionDef, module: ast.Module) -> bool:
+    """Decorated with a tracer, or passed by name to a tracing call
+    anywhere in the module."""
+    for dec in fn.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        segs = set(_attr_chain(target))
+        if segs & _TRACING_CALLEES:
+            return True
+        # @partial(jax.jit, ...) — tracer hides in the partial's args
+        if isinstance(dec, ast.Call):
+            for a in dec.args:
+                if set(_attr_chain(a)) & _TRACING_CALLEES:
+                    return True
+    for call in (n for n in ast.walk(module) if isinstance(n, ast.Call)):
+        if _callee_tail(call) not in _TRACING_CALLEES:
+            continue
+        for a in call.args:
+            if isinstance(a, ast.Name) and a.id == fn.name:
+                return True
+    return False
+
+
+@dataclasses.dataclass
+class _Scope:
+    fn: ast.FunctionDef
+    bound: set            # params + names assigned anywhere in this fn
+    np_consts: dict       # name -> assignment lineno, for np-array binds
+    traced: bool
+
+
+def _fn_bindings(fn: ast.FunctionDef) -> tuple[set, dict]:
+    args = fn.args
+    bound = {a.arg for a in (args.posonlyargs + args.args + args.kwonlyargs)}
+    for extra in (args.vararg, args.kwarg):
+        if extra is not None:
+            bound.add(extra.arg)
+    np_consts: dict[str, int] = {}
+    for node in ast.walk(fn):
+        # don't descend into nested defs for *this* fn's locals — but
+        # ast.walk does; nested assignments still count as "not free in
+        # the nested fn", which is what the capture check needs, so the
+        # over-approximation is harmless for bound and we only record
+        # np_consts from this fn's direct body statements below.
+        if isinstance(node, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name):
+                        bound.add(n.id)
+        elif isinstance(node, (ast.For, ast.AsyncFor)):
+            for n in ast.walk(node.target):
+                if isinstance(n, ast.Name):
+                    bound.add(n.id)
+        elif isinstance(node, ast.withitem) and node.optional_vars:
+            for n in ast.walk(node.optional_vars):
+                if isinstance(n, ast.Name):
+                    bound.add(n.id)
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                               ast.ClassDef)) and node is not fn:
+            bound.add(node.name)
+    for stmt in fn.body:             # direct statements only
+        if isinstance(stmt, ast.Assign) and _is_np_array_expr(stmt.value):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    np_consts[t.id] = stmt.lineno
+    return bound, np_consts
+
+
+def _local_names(fn: ast.FunctionDef) -> set:
+    bound, _ = _fn_bindings(fn)
+    return bound
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, file: str, module: ast.Module,
+                 meta_fields: frozenset):
+        self.file = file
+        self.module = module
+        self.meta_fields = meta_fields
+        self.scopes: list[_Scope] = []
+        self.findings: list[Finding] = []
+
+    # -- scope management --------------------------------------------------
+    def visit_FunctionDef(self, fn: ast.FunctionDef):
+        traced = (_is_traced_def(fn, self.module)
+                  or any(s.traced for s in self.scopes))
+        bound, np_consts = _fn_bindings(fn)
+        scope = _Scope(fn=fn, bound=bound, np_consts=np_consts,
+                       traced=traced)
+        if traced and self.scopes:
+            self._check_captures(fn, scope)
+        self.scopes.append(scope)
+        self.generic_visit(fn)
+        self.scopes.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    # -- LNT001 ------------------------------------------------------------
+    def _check_captures(self, fn: ast.FunctionDef, scope: _Scope):
+        free = set()
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Name)
+                    and isinstance(node.ctx, ast.Load)
+                    and node.id not in scope.bound):
+                free.add(node.id)
+        for name in sorted(free):
+            for enclosing in reversed(self.scopes):
+                if name in enclosing.np_consts:
+                    self.findings.append(Finding(
+                        code="LNT001", file=self.file, obj=fn.name,
+                        line=fn.lineno,
+                        message=f"traced function {fn.name!r} captures "
+                                f"{name!r}, bound to a np.* array at "
+                                f"line {enclosing.np_consts[name]} — the "
+                                f"array is baked into every trace as a "
+                                f"constant (convert with jnp.asarray "
+                                f"once, outside, or pass it as an "
+                                f"argument)"))
+                    break
+                if name in enclosing.bound:
+                    break           # bound to something innocuous
+
+    # -- LNT003 ------------------------------------------------------------
+    def visit_Call(self, call: ast.Call):
+        if any(s.traced for s in self.scopes):
+            chain = _attr_chain(call.func)
+            if len(chain) >= 2 and chain[0] in ("np", "numpy") \
+                    and chain[1] == "random":
+                self._impure(call, ".".join(chain))
+            elif len(chain) == 2 and chain[0] == "random":
+                self._impure(call, ".".join(chain))
+            elif len(chain) == 2 and chain[0] == "time" \
+                    and chain[1] in _TIME_FNS:
+                self._impure(call, ".".join(chain))
+        self.generic_visit(call)
+
+    def _impure(self, call: ast.Call, what: str):
+        fn = self.scopes[-1].fn.name if self.scopes else "<module>"
+        self.findings.append(Finding(
+            code="LNT003", file=self.file, obj=fn, line=call.lineno,
+            message=f"{what}() inside a traced function runs at trace "
+                    f"time: the result is a compile-time constant "
+                    f"replayed by every call (use jax.random with a "
+                    f"threaded key, or hoist out of the trace)"))
+
+    # -- LNT004 ------------------------------------------------------------
+    def visit_Assign(self, node: ast.Assign):
+        for t in node.targets:
+            if (isinstance(t, ast.Attribute)
+                    and t.attr in self.meta_fields
+                    and not (isinstance(t.value, ast.Name)
+                             and t.value.id == "self")):
+                self.findings.append(Finding(
+                    code="LNT004", file=self.file,
+                    obj=(self.scopes[-1].fn.name if self.scopes
+                         else "<module>"),
+                    line=node.lineno,
+                    message=f"assignment to {t.attr!r}, a static "
+                            f"(meta_fields) pytree field — live traces "
+                            f"were specialized on its old value; build "
+                            f"a new instance instead"))
+        self.generic_visit(node)
+
+
+# --------------------------------------------------------------------------
+# repo-level collection
+# --------------------------------------------------------------------------
+
+def collect_meta_fields(root: str) -> frozenset:
+    """Union of every ``meta_fields=[...]`` list in ``register_dataclass``
+    calls under ``root``."""
+    fields: set[str] = set()
+    for path in _py_files(root):
+        try:
+            tree = ast.parse(open(path).read())
+        except SyntaxError:
+            continue
+        for call in (n for n in ast.walk(tree) if isinstance(n, ast.Call)):
+            tail = _callee_tail(call)
+            # direct call, or the @partial(register_dataclass, ...) form
+            if tail != "register_dataclass" and not (
+                    tail == "partial" and call.args
+                    and _attr_chain(call.args[0])
+                    and _attr_chain(call.args[0])[-1]
+                    == "register_dataclass"):
+                continue
+            for kw in call.keywords:
+                if kw.arg == "meta_fields" and isinstance(
+                        kw.value, (ast.List, ast.Tuple)):
+                    for el in kw.value.elts:
+                        if isinstance(el, ast.Constant) \
+                                and isinstance(el.value, str):
+                            fields.add(el.value)
+    return frozenset(fields)
+
+
+def collect_shadowed_names(root: str) -> dict:
+    """``{(pkg_dotted, name)}`` -> __init__ line where ``pkg/__init__``
+    rebinds submodule ``name`` to a non-module object."""
+    shadowed: dict[tuple, int] = {}
+    for dirpath, _dirnames, filenames in os.walk(root):
+        if "__init__.py" not in filenames:
+            continue
+        submodules = {f[:-3] for f in filenames
+                      if f.endswith(".py") and f != "__init__.py"}
+        submodules |= {d for d in _dirnames
+                       if os.path.exists(os.path.join(dirpath, d,
+                                                      "__init__.py"))}
+        init = os.path.join(dirpath, "__init__.py")
+        try:
+            tree = ast.parse(open(init).read())
+        except SyntaxError:
+            continue
+        pkg = _dotted_package(root, dirpath)
+        for node in tree.body:
+            if isinstance(node, ast.ImportFrom) and node.module:
+                src_tail = node.module.split(".")[-1]
+                for alias in node.names:
+                    bound = alias.asname or alias.name
+                    # `from .name import name` — the classic rebind;
+                    # `from . import name` (module import) doesn't shadow
+                    if bound in submodules and src_tail == bound:
+                        shadowed[(pkg, bound)] = node.lineno
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                   ast.ClassDef)):
+                if node.name in submodules:
+                    shadowed[(pkg, node.name)] = node.lineno
+            elif isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name) and t.id in submodules:
+                        shadowed[(pkg, t.id)] = node.lineno
+    return shadowed
+
+
+def _dotted_package(root: str, dirpath: str) -> str:
+    rel = os.path.relpath(dirpath, root)
+    if rel == ".":
+        return os.path.basename(os.path.abspath(dirpath))
+    return rel.replace(os.sep, ".")
+
+
+def _py_files(root: str):
+    if os.path.isfile(root):
+        yield root
+        return
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames
+                       if d not in ("__pycache__", ".git")]
+        for f in sorted(filenames):
+            if f.endswith(".py"):
+                yield os.path.join(dirpath, f)
+
+
+def _check_shadowed_imports(path: str, tree: ast.Module, shadowed: dict,
+                            rel: str) -> list[Finding]:
+    findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.ImportFrom) or not node.module:
+            continue
+        for alias in node.names:
+            # match module paths on dotted-segment suffixes: absolute
+            # spellings ('repro.core'), root-relative collection keys
+            # ('core' when the walk rooted at src/repro), and relative
+            # imports ('from .core import x' -> module='core')
+            for (pkg, name), init_line in shadowed.items():
+                if alias.name != name:
+                    continue
+                mod, p = node.module, pkg
+                if (mod == p or mod.endswith("." + p)
+                        or p.endswith("." + mod)):
+                    findings.append(Finding(
+                        code="LNT002", file=rel, obj=alias.name,
+                        line=node.lineno,
+                        message=f"`from {node.module} import "
+                                f"{alias.name}` is ambiguous: "
+                                f"{node.module}/{alias.name}.py is a "
+                                f"module AND the package __init__ "
+                                f"(line {init_line}) rebinds "
+                                f"{alias.name!r} to a non-module — what "
+                                f"you get depends on import order "
+                                f"(import the module as `from "
+                                f"{node.module}.{alias.name} import "
+                                f"...` or use the rebound attribute "
+                                f"explicitly)"))
+    return findings
+
+
+def lint_source(source: str, *, file: str = "<string>",
+                meta_fields: frozenset = frozenset(),
+                shadowed: Optional[dict] = None) -> list[Finding]:
+    """Lint one file's source. ``shadowed`` maps ``(pkg, name)`` ->
+    line for LNT002 (see :func:`collect_shadowed_names`)."""
+    tree = ast.parse(source)
+    linter = _Linter(file, tree, meta_fields)
+    linter.visit(tree)
+    findings = linter.findings
+    if shadowed:
+        findings += _check_shadowed_imports(file, tree, shadowed, file)
+    return findings
+
+
+def analyze_lint(root: str, *, repo_root: str = ".") -> list[Finding]:
+    """Lint every ``.py`` file under ``root``. meta_fields and the
+    shadow map are collected from ``root`` first, so the checks see the
+    whole analyzed tree."""
+    meta = collect_meta_fields(root)
+    # package shadow map needs the *package* root: src/repro's parent
+    pkg_root = root
+    shadowed = collect_shadowed_names(pkg_root)
+    findings: list[Finding] = []
+    for path in _py_files(root):
+        rel = os.path.relpath(path, repo_root)
+        try:
+            src = open(path).read()
+            findings += lint_source(src, file=rel, meta_fields=meta,
+                                    shadowed=shadowed)
+        except SyntaxError as e:
+            findings.append(Finding(
+                code="LNT002", file=rel, obj="<parse>", line=e.lineno or 0,
+                message=f"file does not parse: {e.msg}"))
+    return findings

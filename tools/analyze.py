@@ -1,0 +1,14 @@
+#!/usr/bin/env python
+"""Wrapper for ``python -m repro.analysis`` that works from a source
+checkout without installing the package (prepends ``src/`` to the path).
+All arguments pass through — see ``repro/analysis/cli.py``."""
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.analysis.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,6 +11,10 @@ Checks, per markdown file:
   * inline-code path references (`src/.../x.py`, `tools/y.py`, ...): must
     exist relative to the repo root. Templates (``BENCH_<name>.json``),
     globs and home paths are skipped.
+  * analyzer finding codes: the set documented in docs/architecture.md's
+    "Static analysis" table must equal the registry in
+    src/repro/analysis/findings.py, in both directions — a new check
+    without docs, or docs for a removed check, fail here.
 
 Exit code 1 with a per-problem listing on failure.
 """
@@ -75,6 +79,36 @@ def check_file(md_path: str) -> list[str]:
     return problems
 
 
+#: a finding code as it appears in docs prose/tables (COL001, PAL100, ...)
+_FINDING_CODE = re.compile(r"\b([A-Z]{3}\d{3})\b")
+
+
+def check_finding_codes() -> list[str]:
+    """docs/architecture.md's finding-code table vs the analyzer registry
+    (``repro.analysis.findings.CODES``) — must match exactly both ways."""
+    arch = os.path.join(_ROOT, "docs", "architecture.md")
+    if not os.path.exists(arch):
+        return ["docs/architecture.md missing (finding-code sync)"]
+    with open(arch) as f:
+        documented = set(_FINDING_CODE.findall(f.read()))
+
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    try:
+        from repro.analysis.findings import CODES
+    finally:
+        sys.path.pop(0)
+    registered = set(CODES)
+
+    problems = []
+    for code in sorted(registered - documented):
+        problems.append(f"docs/architecture.md: finding code {code} is "
+                        f"registered in repro.analysis but undocumented")
+    for code in sorted(documented - registered):
+        problems.append(f"docs/architecture.md: finding code {code} is "
+                        f"documented but not in the analyzer registry")
+    return problems
+
+
 def main() -> int:
     files = [os.path.join(_ROOT, "README.md")] + sorted(
         glob.glob(os.path.join(_ROOT, "docs", "**", "*.md"), recursive=True))
@@ -82,6 +116,7 @@ def main() -> int:
     for f in files:
         if os.path.exists(f):
             problems += check_file(f)
+    problems += check_finding_codes()
     for p in problems:
         print(f"FAIL {p}")
     print(f"checked {len(files)} file(s): "
